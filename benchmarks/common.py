@@ -1,0 +1,32 @@
+"""Shared benchmark utilities.  Output format: ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, repeats: int = 3, warmup: int = 0) -> float:
+    """Median wall time in µs."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+class ZeroRng:
+    def standard_normal(self, n):
+        import numpy as np
+        return np.zeros(n)

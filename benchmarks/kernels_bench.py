@@ -1,0 +1,32 @@
+"""Mechanism hot-path micro-bench: Kronecker matvec (ref jnp path timed on
+CPU; the Pallas kernel is TPU-target, validated in interpret mode — its CPU
+interpret timing is not meaningful and is reported only as a checksum)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.residual import sub_matrix
+from repro.kernels.kron_matvec.ops import kron_matvec_kernel
+from repro.kernels.kron_matvec.ref import kron_matvec_ref
+from .common import emit, timeit
+
+
+def run(fast: bool = True):
+    for dims in ([50, 50, 40], [100, 100], [10] * 6):
+        facs = [sub_matrix(n) for n in dims]
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            int(np.prod(dims))), jnp.float32)
+        ref = jax.jit(lambda x: kron_matvec_ref(facs, x, dims))
+        ref(x).block_until_ready()
+        t = timeit(lambda: ref(x).block_until_ready(), repeats=5)
+        gflops = 2 * sum((n - 1) * np.prod(dims) / n for n in dims) / 1e9
+        emit(f"kernel/kron_ref/dims={'x'.join(map(str, dims))}", t,
+             f"~{gflops / (t / 1e6):.2f} GFLOP/s on CPU")
+        if int(np.prod(dims)) <= 100_000:   # interpret mode is pure Python
+            got = np.asarray(kron_matvec_kernel(facs, np.asarray(x), dims))
+            want = np.asarray(ref(x))
+            emit(f"kernel/kron_pallas_interpret_check/dims={'x'.join(map(str, dims))}",
+                 0.0, f"max_err={np.max(np.abs(got - want)):.2e}")

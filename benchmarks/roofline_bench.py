@@ -1,0 +1,22 @@
+"""§Roofline summary rows from the dry-run artifacts (deliverable g)."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline.analyze import ARTIFACT_DIR, analyze_all
+from .common import emit
+
+
+def run(fast: bool = True):
+    if not os.path.isdir(ARTIFACT_DIR):
+        emit("roofline/missing", 0.0, "run `python -m repro.launch.dryrun --all`")
+        return
+    for c in analyze_all(ARTIFACT_DIR, "single"):
+        if c.status != "ok":
+            emit(f"roofline/{c.arch}/{c.shape}", 0.0, f"{c.status}")
+            continue
+        t_dom = max(c.t_compute, c.t_memory, c.t_collective)
+        emit(f"roofline/{c.arch}/{c.shape}", t_dom * 1e6,
+             f"bottleneck={c.bottleneck} compute={c.t_compute:.2e}s "
+             f"memory={c.t_memory:.2e}s coll={c.t_collective:.2e}s "
+             f"useful={c.useful_ratio:.2f} mfu_bound={c.mfu_bound:.2%}")

@@ -1,0 +1,42 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the complete
+paper grids (d up to 100 etc.); the default profile keeps CI runtime modest.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full paper grids (slow: d up to 100)")
+    ap.add_argument("--only", default=None, help="substring filter on module")
+    args, _ = ap.parse_known_args()
+
+    from . import (table2_3_marginals_scaling, table4_5_accuracy,
+                   table6_9_rplus, table10_14_crossover, fig1_3_fairness,
+                   discrete_overhead, kernels_bench, roofline_bench)
+    modules = [table2_3_marginals_scaling, table4_5_accuracy, table6_9_rplus,
+               table10_14_crossover, fig1_3_fairness, discrete_overhead,
+               kernels_bench, roofline_bench]
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in modules:
+        if args.only and args.only not in mod.__name__:
+            continue
+        try:
+            mod.run(fast=not args.full)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{mod.__name__},nan,EXCEPTION", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Tables 10–14: the HDMM / ResidualPlanner+ accuracy crossover.
+
+k = d Kronecker workloads (HDMM's optimal regime) and k-way sweeps showing
+RP+ wins at low query order and HDMM takes over as k → d (§9.4)."""
+from __future__ import annotations
+
+import itertools
+import math
+
+import numpy as np
+
+from repro.core import Domain, MarginalWorkload
+from repro.core.plus import PlusSchema, build_w, select_plus
+from repro.baselines.hdmm import HdmmKron, HdmmUnion
+from repro.data.tabular import synth_domain
+from .common import emit, timeit
+
+
+def _kron_rmse_hdmm(kind, n, d, iters):
+    kron = HdmmKron.optimize([build_w(kind, n)] * d, iters=iters)
+    return math.sqrt(kron.tv_unit / kron.n_queries)
+
+
+def _kway_union_hdmm(kind, n, d, k, iters):
+    subs = []
+    w = build_w(kind, n)
+    ones = np.ones((1, n))
+    for comb in itertools.combinations(range(d), k):
+        facs = [w if i in comb else ones for i in range(d)]
+        subs.append(HdmmKron.optimize(facs, iters=iters))
+    return HdmmUnion.optimize(subs)
+
+
+def run(fast: bool = True):
+    iters = 300 if fast else 1200
+    # Tables 10/11: k = d, range and prefix, growing n
+    for kind, table in (("range", "table10"), ("prefix", "table11")):
+        for d in (3, 4) if fast else (3, 4, 5):
+            for n in ((2, 4, 8) if fast else (2, 4, 8, 16, 32, 64)):
+                dom = synth_domain(n, d, kind="numeric")
+                wk = MarginalWorkload(dom, (tuple(range(d)),))
+                schema = PlusSchema.create(dom, [kind] * d, strategy_mode="auto")
+                t = timeit(lambda: select_plus(wk, schema, 1.0, "sov"), repeats=1)
+                rp = select_plus(wk, schema, 1.0, "sov")
+                hd = _kron_rmse_hdmm(kind, n, d, iters)
+                emit(f"{table}/kron_{kind}/n={n}/d={d}", t,
+                     f"rp+={rp.rmse():.3f} hdmm={hd:.3f} "
+                     f"(paper: HDMM optimal here)")
+    # Tables 12/13: k-way prefix sweeps (crossover point)
+    for d, n, table in ((5, 10, "table12"), (10, 10, "table13")):
+        if fast and table == "table13":
+            continue
+        dom = synth_domain(n, d, kind="numeric")
+        for k in range(1, min(d, 5) + 1):
+            wk = MarginalWorkload(
+                dom, tuple(itertools.combinations(range(d), k)))
+            schema = PlusSchema.create(dom, ["prefix"] * d, strategy_mode="auto")
+            rp = select_plus(wk, schema, 1.0, "sov")
+            hd = _kway_union_hdmm("prefix", n, d, k, iters)
+            emit(f"{table}/kway_prefix/d={d}/k={k}", 0.0,
+                 f"rp+={rp.rmse():.3f} hdmm_opt+={hd.rmse(1.0):.3f}")

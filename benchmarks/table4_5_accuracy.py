@@ -1,0 +1,34 @@
+"""Paper Tables 4 & 5: RMSE vs the SVD bound (optimality sanity) and max
+variance, on the Adult / CPS / Loans schemas at pcost = 1."""
+from __future__ import annotations
+
+from repro.core import Domain, all_kway, select_max_variance, select_sum_of_variances
+from repro.baselines.svdb import svdb_rmse_marginals
+from repro.data.tabular import ADULT_SIZES, CPS_SIZES, LOANS_SIZES
+from .common import emit, timeit
+
+PAPER4 = {"adult": {1: 3.047, 2: 6.359, 3: 10.515, "le3": 10.665},
+          "cps": {1: 1.744, 2: 2.035, 3: 2.048, "le3": 2.276},
+          "loans": {1: 2.875, 2: 5.634, 3: 8.702, "le3": 8.876}}
+PAPER5 = {"adult": {1: 12.047, 2: 67.802, 3: 236.843, "le3": 253.605},
+          "cps": {1: 4.346, 2: 7.897, 3: 7.706, "le3": 13.216},
+          "loans": {1: 10.640, 2: 52.217, 3: 156.638, "le3": 180.817}}
+
+
+def run(fast: bool = True):
+    for name, sizes in [("adult", ADULT_SIZES), ("cps", CPS_SIZES),
+                        ("loans", LOANS_SIZES)]:
+        dom = Domain.create(sizes)
+        for key in (1, 2, 3, "le3"):
+            k, lower = (3, True) if key == "le3" else (key, False)
+            wk = all_kway(dom, k, include_lower=lower)
+            cells = {c: float(dom.n_cells(c)) for c in wk.cliques}
+            t = timeit(lambda: select_sum_of_variances(wk, 1.0, cells))
+            plan = select_sum_of_variances(wk, 1.0, cells)
+            emit(f"table4/rmse/{name}/{key}way", t,
+                 f"ours={plan.rmse():.3f} svdb={svdb_rmse_marginals(wk):.3f} "
+                 f"paper={PAPER4[name][key]}")
+            t = timeit(lambda: select_max_variance(wk, 1.0, iters=4000), repeats=1)
+            mv = select_max_variance(wk, 1.0, iters=6000)
+            emit(f"table5/maxvar/{name}/{key}way", t,
+                 f"ours={mv.max_variance():.3f} paper={PAPER5[name][key]}")

@@ -1,0 +1,52 @@
+"""Fault-tolerance demo: train, simulate a node failure mid-run, resume from
+the latest atomic checkpoint, and verify the loss trajectory continues; then
+restore the same checkpoint onto a *different* mesh (elastic re-mesh).
+
+Run:  PYTHONPATH=src python examples/fault_tolerance_demo.py
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro.configs.shapes import reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import train_loop
+from repro.models import Model
+from repro.train import AdamWConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.train_step import init_train_state
+
+CKPT = "artifacts/ft_demo_ckpt"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = reduced_config("qwen3-4b")
+
+    print("== phase 1: train 30 steps, checkpoint every 10 ==")
+    train_loop(cfg, steps=30, batch_size=4, seq_len=32, ckpt_dir=CKPT,
+               resume=False, dp=None, microbatches=1, ckpt_every=10)
+
+    print("\n== simulated failure: process dies; restart with --resume ==")
+    _, losses = train_loop(cfg, steps=45, batch_size=4, seq_len=32,
+                           ckpt_dir=CKPT, resume=True, dp=None,
+                           microbatches=1, ckpt_every=10)
+    print(f"resumed and reached loss {losses[-1]:.4f}")
+
+    print("\n== elastic re-mesh: restore checkpoint onto a fresh mesh ==")
+    model = Model(cfg)
+    oc = AdamWConfig()
+    state_like = init_train_state(model, jax.random.PRNGKey(0), oc)
+    mgr = CheckpointManager(CKPT)
+    mesh = make_host_mesh()
+    from repro.models.sharding import spec_for
+    shardings = jax.tree_util.tree_map(lambda _: spec_for(mesh), state_like)
+    restored, manifest = mgr.restore(state_like, shardings=shardings)
+    print(f"restored step {manifest['step']} onto mesh {mesh.shape} — "
+          f"params on {len(jax.devices())} device(s)")
+    print("fault-tolerance demo OK")
+
+
+if __name__ == "__main__":
+    main()

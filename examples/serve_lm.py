@@ -1,0 +1,8 @@
+"""Batched serving example: prefill + greedy decode with KV/state caches.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 12
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

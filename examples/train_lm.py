@@ -1,0 +1,11 @@
+"""End-to-end LM training driver with DP-SGD priced by the paper's accountant.
+
+Reduced same-family config on CPU; on TPU pods drop --reduced and pick a mesh.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --arch qwen3-4b --steps 60 --dp-noise 1.0
+"""
+import sys
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,217 @@
+r"""HDMM baseline (McKenna et al. [40, 41]) re-implemented in JAX.
+
+Templates implemented (the ones the paper benchmarks against):
+
+* ``opt_pidentity``   — the 1-D p-Identity strategy optimizer: A(θ) = [I; B(θ)]
+  with nonnegative B, columns normalized to unit L2 (so pcost(A) = 1), Adam on
+  ``tr(W (AᵀA)⁻¹ Wᵀ)``.  Also used by ResidualPlanner+ to produce strategy
+  replacements S_i ("the 1-dimensional optimizer included with HDMM", §9).
+* ``HdmmKron``        — OPT_⊗: per-axis p-Identity on a Kronecker workload;
+  unit-pcost total variance is the product of per-axis traces.
+* ``HdmmUnion``       — OPT_+: Cauchy–Schwarz budget split across sub-strategies.
+
+Reconstruction is deliberately faithful to HDMM's *universe-sized* least
+squares (x̂ = ⊗ A_i† y): it materializes O(Π n_i) vectors and therefore hits
+the same memory wall the paper reports (Table 3: OOM at d = 10 for n = 10).
+A guard raises ``MemoryError`` before the allocation so benchmarks can record
+"out of memory" rather than killing the process.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domain import Clique, Domain, MarginalWorkload
+
+# Reconstruction guard: refuse to materialize more than this many float64s.
+OOM_GUARD_ELEMS = 1 << 27  # 128M elems = 1 GiB
+
+
+_PIDENTITY_CACHE: Dict[tuple, np.ndarray] = {}
+
+
+def opt_pidentity(W: np.ndarray, p: Optional[int] = None, iters: int = 1000,
+                  lr: float = 0.05, seed: int = 0) -> np.ndarray:
+    """Optimize a p-Identity strategy for a 1-D workload W; returns A with
+    unit-L2 columns (pcost(A x + N(0,I)) = 1).
+
+    Memoized on (W bytes, p, iters, seed): union workloads re-optimize the
+    same per-attribute matrices hundreds of times (e.g. prefix-100 appears in
+    every Adult subworkload).
+    """
+    W = np.asarray(W, dtype=np.float64)
+    ck = (W.shape, W.tobytes(), p, iters, seed)
+    hit = _PIDENTITY_CACHE.get(ck)
+    if hit is not None:
+        return hit
+    n = W.shape[1]
+    if n == 1:
+        return np.ones((1, 1))
+    p = p if p is not None else max(1, n // 16 + 1)
+    WtW = jnp.asarray(W.T @ W)
+    eye = jnp.eye(n)
+
+    def make_A(theta):
+        B = jax.nn.softplus(theta)
+        A = jnp.vstack([eye, B])
+        col = jnp.sqrt(jnp.sum(A * A, axis=0))
+        return A / col
+
+    def loss(theta):
+        A = make_A(theta)
+        M = A.T @ A + 1e-9 * eye
+        return jnp.trace(jnp.linalg.solve(M, WtW))
+
+    @jax.jit
+    def run(theta0):
+        def step(carry, i):
+            theta, mo, ve = carry
+            g = jax.grad(loss)(theta)
+            mo = 0.9 * mo + 0.1 * g
+            ve = 0.999 * ve + 0.001 * g * g
+            mh = mo / (1 - 0.9 ** (i + 1.0))
+            vh = ve / (1 - 0.999 ** (i + 1.0))
+            return (theta - lr * mh / (jnp.sqrt(vh) + 1e-9), mo, ve), None
+        (theta, _, _), _ = jax.lax.scan(
+            step, (theta0, jnp.zeros_like(theta0), jnp.zeros_like(theta0)),
+            jnp.arange(iters))
+        return theta
+
+    key = jax.random.PRNGKey(seed)
+    theta0 = jax.random.normal(key, (p, n)) * 0.5 - 1.0
+    theta = run(theta0)
+    out = np.asarray(make_A(theta), dtype=np.float64)
+    _PIDENTITY_CACHE[ck] = out
+    return out
+
+
+def opt_pidentity_projected(W: np.ndarray, **kw) -> np.ndarray:
+    """Strategy for W with the all-ones row projected out (paper §9 setup):
+    optimize on P₁ = W - W·11ᵀ/n, then return the strategy (used as S_i)."""
+    W = np.asarray(W, dtype=np.float64)
+    n = W.shape[1]
+    P1 = W - (W @ np.ones((n, 1))) @ np.ones((1, n)) / n
+    return opt_pidentity(P1, **kw)
+
+
+@dataclass
+class HdmmKron:
+    """OPT_⊗: a Kronecker-product strategy ⊗ A_i for a workload ⊗ W_i."""
+
+    factors_W: List[np.ndarray]
+    factors_A: List[np.ndarray] = field(default_factory=list)
+    tv_unit: float = 0.0          # total variance at pcost budget 1
+    maxvar_unit: float = 0.0      # max per-query variance at budget 1
+
+    @staticmethod
+    def optimize(factors_W: Sequence[np.ndarray], **kw) -> "HdmmKron":
+        A, tvs, mvs = [], [], []
+        for Wi in factors_W:
+            Wi = np.asarray(Wi, dtype=np.float64)
+            if Wi.shape == (1, Wi.shape[1]):          # all-ones (marginalized axis)
+                Ai = np.ones((1, Wi.shape[1]))
+                Ai = Ai / np.linalg.norm(Ai, axis=0)  # unit cols
+            elif Wi.shape[0] == Wi.shape[1] and np.allclose(Wi, np.eye(Wi.shape[1])):
+                Ai = np.eye(Wi.shape[1])              # identity is optimal for itself
+            else:
+                Ai = opt_pidentity(Wi, **kw)
+            A.append(Ai)
+            M = Ai.T @ Ai
+            G = Wi @ np.linalg.pinv(M) @ Wi.T
+            tvs.append(float(np.trace(G)))
+            mvs.append(float(np.max(np.diag(G))))
+        return HdmmKron(list(map(np.asarray, factors_W)), A,
+                        float(np.prod(tvs)), float(np.prod(mvs)))
+
+    @property
+    def n_queries(self) -> int:
+        return int(np.prod([w.shape[0] for w in self.factors_W]))
+
+
+@dataclass
+class HdmmUnion:
+    """OPT_+: a union of Kron strategies with optimal budget allocation."""
+
+    subs: List[HdmmKron]
+    shares: np.ndarray            # fraction of pcost given to each sub-strategy
+    tv_unit: float                # total variance of the whole union at budget 1
+
+    @staticmethod
+    def optimize(subs: Sequence[HdmmKron]) -> "HdmmUnion":
+        tv = np.array([s.tv_unit for s in subs])
+        shares = np.sqrt(tv)
+        shares = shares / shares.sum()
+        tv_total = float((np.sqrt(tv).sum()) ** 2)  # Σ tv_j / share_j, Σ share = 1
+        return HdmmUnion(list(subs), shares, tv_total)
+
+    def total_variance(self, pcost_budget: float = 1.0) -> float:
+        return self.tv_unit / pcost_budget
+
+    def rmse(self, pcost_budget: float = 1.0) -> float:
+        cells = sum(s.n_queries for s in self.subs)
+        return math.sqrt(self.total_variance(pcost_budget) / cells)
+
+    def max_variance(self, pcost_budget: float = 1.0) -> float:
+        return max(s.maxvar_unit / (sh * pcost_budget)
+                   for s, sh in zip(self.subs, self.shares))
+
+
+def _marginal_factors_dense(domain: Domain, clique: Clique) -> List[np.ndarray]:
+    return [np.eye(a.size) if i in set(clique) else np.ones((1, a.size))
+            for i, a in enumerate(domain.attributes)]
+
+
+def hdmm_marginals(workload: MarginalWorkload, **kw) -> HdmmUnion:
+    """HDMM (DefaultUnionKron) on a pure-marginal workload."""
+    subs = [HdmmKron.optimize(_marginal_factors_dense(workload.domain, c), **kw)
+            for c in workload.cliques]
+    return HdmmUnion.optimize(subs)
+
+
+def hdmm_generalized(workload: MarginalWorkload, kinds: Sequence[str], **kw) -> HdmmUnion:
+    """HDMM on generalized marginals (per-attribute basic matrices, §9 setup)."""
+    from repro.core.plus import build_w
+    subs = []
+    for c in workload.cliques:
+        facs = []
+        for i, a in enumerate(workload.domain.attributes):
+            facs.append(build_w(kinds[i], a.size) if i in set(c)
+                        else np.ones((1, a.size)))
+        subs.append(HdmmKron.optimize(facs, **kw))
+    return HdmmUnion.optimize(subs)
+
+
+# ---------------------------------------------------------------------------
+# Universe-sized measurement + reconstruction (the part that hits HDMM's wall)
+# ---------------------------------------------------------------------------
+
+def hdmm_measure_reconstruct(union: HdmmUnion, domain: Domain, x: np.ndarray,
+                             rng: np.random.Generator,
+                             pcost_budget: float = 1.0) -> List[np.ndarray]:
+    """y_j = A_j x + noise;  x̂_j = ⊗ A_i† y_j;  answers = W_j x̂_j.
+
+    Materializes universe-sized intermediates exactly like HDMM's reconstruction
+    (the paper's Table 3 shows this OOMs at d = 10, n = 10).
+    """
+    from repro.core.kron import kron_matvec_np
+    d = domain.universe_size()
+    if d > OOM_GUARD_ELEMS:
+        raise MemoryError(f"HDMM reconstruction needs a {d}-element universe vector")
+    answers = []
+    x = np.asarray(x, dtype=np.float64).reshape(-1)
+    for sub, share in zip(union.subs, union.shares):
+        budget = share * pcost_budget
+        dims = [w.shape[1] for w in sub.factors_W]
+        m = int(np.prod([a.shape[0] for a in sub.factors_A]))
+        y = kron_matvec_np(sub.factors_A, x, dims)
+        y = y + rng.standard_normal(m) / math.sqrt(budget)
+        pinvs = [np.linalg.pinv(a) for a in sub.factors_A]
+        xhat = kron_matvec_np(pinvs, y, [a.shape[0] for a in sub.factors_A])
+        answers.append(kron_matvec_np(sub.factors_W, xhat, dims))
+    return answers

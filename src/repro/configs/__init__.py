@@ -1,0 +1,15 @@
+"""Architecture configs (one module per assigned arch) + paper-plane configs.
+
+Importing this package registers every architecture in the model registry.
+"""
+ARCH_IDS = (
+    "xlstm-350m", "recurrentgemma-2b", "qwen2.5-14b", "qwen1.5-32b",
+    "yi-34b", "qwen3-4b", "kimi-k2-1t-a32b", "deepseek-v2-236b",
+    "chameleon-34b", "whisper-small",
+)
+
+
+def load_all():
+    import importlib
+    for a in ARCH_IDS:
+        importlib.import_module(f"repro.configs.{a.replace('-', '_').replace('.', '_')}")

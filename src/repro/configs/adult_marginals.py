@@ -1,0 +1,14 @@
+"""Paper-plane config: the Adult ≤3-way marginal workload (paper §8).
+
+Usage:
+    from repro.configs.adult_marginals import make
+    domain, workload = make(kmax=3)
+"""
+from repro.core import Domain, all_kway
+from repro.data.tabular import ADULT_SIZES
+
+
+def make(kmax: int = 3, weights: str = "cells"):
+    domain = Domain.create(ADULT_SIZES, names=[f"adult{i}" for i in range(14)])
+    wk = all_kway(domain, kmax, include_lower=True).reweighted(weights)
+    return domain, wk

@@ -1,0 +1,18 @@
+"""Paper-plane config: Synth-n^d generalized-marginal (range/prefix) workloads
+(paper §9) for ResidualPlanner+.
+
+Usage:
+    from repro.configs.synth_ranges import make
+    domain, workload, schema = make(n=10, d=20, kind="range")
+"""
+from repro.core import all_kway
+from repro.core.plus import PlusSchema
+from repro.data.tabular import synth_domain
+
+
+def make(n: int = 10, d: int = 20, kmax: int = 3, kind: str = "range",
+         strategy_mode: str = "hier"):
+    domain = synth_domain(n, d, kind="numeric")
+    wk = all_kway(domain, min(kmax, d), include_lower=True)
+    schema = PlusSchema.create(domain, [kind] * d, strategy_mode=strategy_mode)
+    return domain, wk, schema

@@ -1,0 +1,17 @@
+"""ResidualPlanner(+) core: the paper's contribution as a composable JAX library."""
+from .domain import (Attribute, Clique, Domain, MarginalWorkload, all_kway,
+                     as_clique, closure, subsets)
+from .residual import (expand_marginal, expand_residual, marginal_factors,
+                       p_coeff, residual_factors, sub_gram, sub_matrix,
+                       sub_pinv, variance_coeff)
+from .select import (Plan, select, select_convex, select_max_variance,
+                     select_sum_of_variances, select_utility_constrained)
+from .mechanism import (Measurement, exact_marginals_from_x, measure,
+                        measure_np, pcost_of_plan, residual_answer)
+from .reconstruct import (marginal_covariance_dense, marginal_variance,
+                          reconstruct_all, reconstruct_marginal)
+from .accountant import (PrivacyBudget, approx_dp_delta, approx_dp_eps,
+                         gdp_mu, pcost_for_eps_delta, pcost_for_mu,
+                         pcost_for_rho, zcdp_rho)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

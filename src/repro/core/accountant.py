@@ -1,0 +1,111 @@
+"""Privacy accounting: pcost → ρ-zCDP / (ε,δ)-approximate DP / μ-GDP (Def. 2).
+
+The privacy cost of a linear Gaussian mechanism is the largest diagonal of
+``Bᵀ Σ⁻¹ B``; the paper's Definition 2 converts it to the three DP flavours.
+This module is also used by the DP-SGD integration (train/dp.py): clipped
+per-example gradients with Gaussian noise are a linear Gaussian mechanism
+with ``pcost = (C/σ)²`` per step, composed additively.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+def _phi(x: float) -> float:
+    """Standard normal CDF."""
+    return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
+
+
+def zcdp_rho(pcost: float) -> float:
+    return pcost / 2.0
+
+
+def gdp_mu(pcost: float) -> float:
+    return math.sqrt(pcost)
+
+
+def approx_dp_delta(pcost: float, eps: float) -> float:
+    """δ as a function of ε for a mechanism with the given pcost (Def. 2, [5])."""
+    if pcost <= 0:
+        return 0.0
+    r = math.sqrt(pcost)
+    return _phi(r / 2.0 - eps / r) - math.exp(eps) * _phi(-r / 2.0 - eps / r)
+
+
+def approx_dp_eps(pcost: float, delta: float, hi: float = 200.0) -> float:
+    """Invert δ(ε) by bisection (δ is decreasing in ε)."""
+    if pcost <= 0:
+        return 0.0
+    lo = 0.0
+    if approx_dp_delta(pcost, lo) <= delta:
+        return 0.0
+    for _ in range(200):
+        mid = (lo + hi) / 2.0
+        if approx_dp_delta(pcost, mid) > delta:
+            lo = mid
+        else:
+            hi = mid
+    return hi
+
+
+def pcost_for_rho(rho: float) -> float:
+    return 2.0 * rho
+
+
+def pcost_for_mu(mu: float) -> float:
+    return mu * mu
+
+
+def pcost_for_eps_delta(eps: float, delta: float) -> float:
+    """Largest pcost whose (ε,δ) curve passes under the target (bisection)."""
+    lo, hi = 0.0, 1.0
+    while approx_dp_delta(hi, eps) < delta:
+        hi *= 2.0
+        if hi > 1e9:
+            break
+    for _ in range(200):
+        mid = (lo + hi) / 2.0
+        if approx_dp_delta(mid, eps) < delta:
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+@dataclass
+class PrivacyBudget:
+    """A total pcost budget with sequential-composition tracking."""
+
+    total_pcost: float
+    spent: float = 0.0
+
+    @staticmethod
+    def from_zcdp(rho: float) -> "PrivacyBudget":
+        return PrivacyBudget(pcost_for_rho(rho))
+
+    @staticmethod
+    def from_gdp(mu: float) -> "PrivacyBudget":
+        return PrivacyBudget(pcost_for_mu(mu))
+
+    @staticmethod
+    def from_approx_dp(eps: float, delta: float) -> "PrivacyBudget":
+        return PrivacyBudget(pcost_for_eps_delta(eps, delta))
+
+    @property
+    def remaining(self) -> float:
+        return max(0.0, self.total_pcost - self.spent)
+
+    def charge(self, pcost: float) -> None:
+        if pcost > self.remaining + 1e-12:
+            raise ValueError(f"privacy budget exhausted: need {pcost}, have {self.remaining}")
+        self.spent += pcost
+
+    def report(self) -> dict:
+        return {
+            "pcost_total": self.total_pcost,
+            "pcost_spent": self.spent,
+            "rho_zcdp": zcdp_rho(self.spent),
+            "mu_gdp": gdp_mu(self.spent),
+            "eps_at_delta_1e-6": approx_dp_eps(self.spent, 1e-6) if self.spent else 0.0,
+        }

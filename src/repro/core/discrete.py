@@ -1,0 +1,190 @@
+r"""Numerically secure measurement with discrete Gaussian noise (Section 5, Alg 3).
+
+The pitfall (Example 2): naively swapping the correlated continuous noise
+``N(0, σ²Σ_A)`` for independent discrete Gaussians costs up to 2^k in privacy
+for k-way marginals.  The fix rotates the base mechanism into an equivalent
+*integer-query, independent-noise* mechanism:
+
+    Y   = ⊗_i |Att_i|·Sub_i^†
+    Ξ   = Y R_A              (integer matrix;  Ξx = H v  with
+                              H = ⊗_i (n_i·I - 1 1ᵀ)  applied to the marginal v)
+    γ²  = (s/t)² · Π n_i²    (σ̄ = s/t ≥ σ_A rounded up to a rational)
+    M'(x) = Ξ x + N_Z(0, γ² I)      →  release  Y† M'(x)
+
+M' and M_A(·; σ̄²) are mutual post-processings (Thm 6), so the discrete version
+inherits the continuous ρ-zCDP guarantee exactly.
+
+The sampler is the exact rejection sampler of Canonne–Kamath–Steinke (2020),
+implemented over ``fractions.Fraction`` — no floating point touches the noise
+path (host-side by design; see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from fractions import Fraction
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .domain import Clique, Domain
+from .kron import kron_matvec_np
+from .mechanism import Measurement
+from .residual import sub_matrix
+from .select import Plan
+
+
+# ---------------------------------------------------------------------------
+# Exact discrete Gaussian sampling (CKS'20)
+# ---------------------------------------------------------------------------
+
+def _bernoulli(p: Fraction, rng: "random.Random") -> bool:
+    """Exact Bernoulli(p) for rational p via arbitrary-precision integer uniform.
+
+    ``random.Random.randrange`` is used (not numpy) because Fraction
+    denominators routinely exceed 2**63 on the exact noise path.
+    """
+    return rng.randrange(p.denominator) < p.numerator
+
+
+def _bernoulli_exp(gamma: Fraction, rng: "random.Random") -> bool:
+    """Exact Bernoulli(exp(-gamma)) for rational gamma >= 0 (CKS Alg. 1)."""
+    if gamma <= 1:
+        k = 1
+        while _bernoulli(gamma / k, rng):
+            k += 1
+        return k % 2 == 1
+    for _ in range(math.floor(gamma)):
+        if not _bernoulli_exp(Fraction(1), rng):
+            return False
+    return _bernoulli_exp(gamma - math.floor(gamma), rng)
+
+
+def _sample_dlaplace(t: int, rng: "random.Random") -> int:
+    """Exact discrete Laplace with scale t:  P(x) ∝ exp(-|x|/t)  (CKS Alg. 2)."""
+    while True:
+        u = rng.randrange(t)
+        if not _bernoulli_exp(Fraction(u, t), rng):
+            continue
+        v = 0
+        while _bernoulli_exp(Fraction(1), rng):
+            v += 1
+        x = u + t * v
+        if _bernoulli(Fraction(1, 2), rng):  # sign
+            if x == 0:
+                continue
+            return -x
+        return x
+
+
+def sample_discrete_gaussian(sigma2: Fraction, rng: "random.Random") -> int:
+    """Exact discrete Gaussian N_Z(0, σ²):  P(x) ∝ exp(-x²/2σ²)  (CKS Alg. 3)."""
+    if sigma2 <= 0:
+        raise ValueError("sigma2 must be positive")
+    t = math.floor(math.isqrt(int(sigma2)) if sigma2.denominator == 1
+                   else math.sqrt(float(sigma2))) + 1
+    while True:
+        y = _sample_dlaplace(t, rng)
+        num = (Fraction(abs(y)) - sigma2 / t) ** 2
+        if _bernoulli_exp(num / (2 * sigma2), rng):
+            return y
+
+
+def sample_discrete_gaussian_vec(sigma2: Fraction, size: int,
+                                 rng: "random.Random") -> np.ndarray:
+    return np.array([sample_discrete_gaussian(sigma2, rng) for _ in range(size)],
+                    dtype=object)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3
+# ---------------------------------------------------------------------------
+
+def rationalize_sigma(sigma: float, digits: int = 4) -> Fraction:
+    """Round σ *up* to a rational s/t with ``digits`` decimal digits (§5.2)."""
+    scale = 10 ** digits
+    return Fraction(math.ceil(sigma * scale), scale)
+
+
+@dataclass
+class DiscreteMeasurement(Measurement):
+    sigma_bar: Fraction = Fraction(0)
+    gamma2: Fraction = Fraction(0)
+
+
+def _h_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
+    """H = ⊗_i (n_i·I - 1 1ᵀ):  H v = Ξ x, all-integer (Alg 3 line 4)."""
+    facs = []
+    for i in clique:
+        n = domain.attributes[i].size
+        facs.append(n * np.eye(n) - np.ones((n, n)))
+    return facs
+
+
+def _ypinv_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
+    """Y† = ⊗_i (1/n_i)·Sub_{n_i} (Alg 3 line 3)."""
+    return [sub_matrix(domain.attributes[i].size) / domain.attributes[i].size
+            for i in clique]
+
+
+def measure_discrete(plan: Plan, marginals: Mapping[Clique, np.ndarray],
+                     rng: "random.Random", digits: int = 4,
+                     _noise_override=None) -> Dict[Clique, DiscreteMeasurement]:
+    """Algorithm 3 for every base mechanism in the plan.
+
+    Outputs are drop-in replacements for the continuous measurements: same
+    shapes, same unbiasedness, and (Thm 6) the same ρ-zCDP parameter as the
+    continuous mechanism run at σ̄_A ≥ σ_A.
+    """
+    out: Dict[Clique, DiscreteMeasurement] = {}
+    for clique in plan.cliques:
+        dims = [plan.domain.attributes[i].size for i in clique]
+        v = np.asarray(marginals[clique], dtype=np.float64).reshape(-1)
+        sigma_bar = rationalize_sigma(math.sqrt(plan.sigmas[clique]), digits)
+        n_prod = int(np.prod(dims)) if clique else 1
+        gamma2 = sigma_bar ** 2 * n_prod ** 2
+        if not clique:
+            z = (_noise_override(gamma2, 1, rng) if _noise_override is not None
+                 else sample_discrete_gaussian_vec(gamma2, 1, rng))
+            omega = v + np.asarray(z, dtype=np.float64)
+            out[clique] = DiscreteMeasurement(clique, omega, float(sigma_bar ** 2),
+                                              sigma_bar, gamma2)
+            continue
+        hv = kron_matvec_np(_h_factors(plan.domain, clique), v, dims)  # = Ξx
+        z = (_noise_override(gamma2, n_prod, rng) if _noise_override is not None
+             else sample_discrete_gaussian_vec(gamma2, n_prod, rng))
+        noisy = hv + np.asarray(z, dtype=np.float64)
+        omega = kron_matvec_np(_ypinv_factors(plan.domain, clique), noisy, dims)
+        out[clique] = DiscreteMeasurement(clique, omega, float(sigma_bar ** 2),
+                                          sigma_bar, gamma2)
+    return out
+
+
+def xi_l2_sensitivity2(domain: Domain, clique: Clique) -> int:
+    """Squared L2 sensitivity of Ξ = Y R_A: Π_i n_i (n_i - 1) (integer, exact).
+
+    Each record's column of Ξ is ⊗_i (n_i e_j - 1), with squared norm
+    (n_i-1)² + (n_i-1) = n_i(n_i-1) per axis.
+    """
+    out = 1
+    for i in clique:
+        n = domain.attributes[i].size
+        out *= n * (n - 1)
+    return out
+
+
+def discrete_zcdp_rho(domain: Domain, clique: Clique, sigma_bar: Fraction) -> Fraction:
+    """ρ for the discrete mechanism: sens²/(2γ²) — equals p_A/(2σ̄²) (Thm 6)."""
+    n_prod = 1
+    for i in clique:
+        n_prod *= domain.attributes[i].size
+    gamma2 = sigma_bar ** 2 * n_prod ** 2
+    return Fraction(xi_l2_sensitivity2(domain, clique)) / (2 * gamma2)
+
+
+def naive_discrete_rho(plan: Plan) -> float:
+    """ρ of the *naive* swap (Example 2): each M_A treated as sensitivity-1
+    discrete-Gaussian marginal + post-processing ⇒ ρ_A = 1/(2σ̄²_A), losing the
+    Π (n_i-1)/n_i factor (up to 2^k for k binary attributes)."""
+    return sum(1.0 / (2.0 * plan.sigmas[c]) for c in plan.cliques)

@@ -1,0 +1,395 @@
+r"""ResidualPlanner+ (Section 7): generalized marginals beyond identity queries.
+
+Every attribute i carries a *basic matrix* W_i (identity / prefix-sum / range /
+custom; the only requirement is that 1ᵀ lies in W_i's row space) and an optional
+*strategy replacement* S_i with row space ⊇ row space of W_i.  Algorithm 4
+builds a generalized subtraction matrix Sub_i whose rows span the part of S_i's
+row space orthogonal to 1, plus a noise factor Γ_i:
+
+    identity attribute:  Sub_i = Sub_{n}   (Section 4.2),  Γ_i = Sub_i
+    otherwise:           P₁ = S_i - S_i 11ᵀ/n,  P₁ᵀP₁ = L Lᵀ (eigh-based
+                         factorization; Cholesky is rank-deficient here),
+                         Sub_i = P₂ᵀ (independent columns of L),  Γ_i = I.
+
+Base mechanisms, measurement (Alg 5), reconstruction (Alg 6) and the SoV
+formula (Thm 8) then follow the ResidualPlanner pattern with these factors.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .domain import Clique, Domain, MarginalWorkload, closure, subsets
+from .kron import kron_matvec, kron_matvec_np
+from .mechanism import Measurement
+from .residual import sub_matrix, sub_pinv
+
+# ---------------------------------------------------------------------------
+# Basic (workload) matrices
+# ---------------------------------------------------------------------------
+
+def w_identity(n: int) -> np.ndarray:
+    return np.eye(n)
+
+
+def w_prefix(n: int) -> np.ndarray:
+    """All prefix sums: row i answers 'value <= i' (lower-triangular ones)."""
+    return np.tril(np.ones((n, n)))
+
+
+def w_range(n: int) -> np.ndarray:
+    """All n(n+1)/2 contiguous ranges [a, b]."""
+    rows = []
+    for a in range(n):
+        for b in range(a, n):
+            r = np.zeros(n)
+            r[a:b + 1] = 1.0
+            rows.append(r)
+    return np.array(rows)
+
+
+def w_total(n: int) -> np.ndarray:
+    return np.ones((1, n))
+
+
+def build_w(kind: str, n: int) -> np.ndarray:
+    return {"identity": w_identity, "prefix": w_prefix,
+            "range": w_range, "total": w_total}[kind](n)
+
+
+def s_hierarchical(n: int, branching: int = 2) -> np.ndarray:
+    """Hierarchical (H-tree) strategy: identity leaves + interval sums per level.
+
+    A classic strategy replacement for range/prefix workloads [Hay et al.].
+    """
+    rows = [np.eye(n)]
+    width = branching
+    while width < n:
+        lvl = np.zeros(((n + width - 1) // width, n))
+        for j in range(lvl.shape[0]):
+            lvl[j, j * width:(j + 1) * width] = 1.0
+        rows.append(lvl)
+        width *= branching
+    rows.append(np.ones((1, n)))
+    return np.vstack(rows)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 4: generalized subtraction matrices
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AttrBasis:
+    """Per-attribute generalized residual data for ResidualPlanner+."""
+
+    n: int
+    W: np.ndarray                # basic matrix (rows x n)
+    S: np.ndarray                # strategy replacement
+    Sub: np.ndarray              # generalized subtraction matrix (r x n), Sub·1 = 0
+    Gamma: np.ndarray            # noise factor; cov factor = Γ Γᵀ
+    identity: bool
+    beta: float                  # max diag of Subᵀ (ΓΓᵀ)⁻¹ Sub  (Thm 7)
+    sub_pinv: np.ndarray         # Sub^† (n x r)
+
+    @property
+    def fnorm2(self) -> float:
+        """‖W Sub† Γ‖_F² — the measured-part variance factor in Thm 8."""
+        return float(np.linalg.norm(self.W @ self.sub_pinv @ self.Gamma, ord="fro") ** 2)
+
+    @property
+    def wones2(self) -> float:
+        """‖W 1‖² / n² — the marginalized-part variance factor in Thm 8."""
+        return float(np.linalg.norm(self.W @ np.ones(self.n)) ** 2) / self.n ** 2
+
+
+def attr_basis(W: np.ndarray, S: Optional[np.ndarray] = None,
+               tol: float = 1e-9) -> AttrBasis:
+    W = np.asarray(W, dtype=np.float64)
+    n = W.shape[1]
+    S = W if S is None else np.asarray(S, dtype=np.float64)
+    # sanity: 1ᵀ must be in the row space of W (paper's only restriction).
+    ones = np.ones(n)
+    resid = ones - W.T @ np.linalg.lstsq(W.T, ones, rcond=None)[0]
+    if np.linalg.norm(resid) > 1e-6 * math.sqrt(n):
+        raise ValueError("1ᵀ is not in the row space of W")
+    is_identity = W.shape == (n, n) and np.allclose(W, np.eye(n))
+    if is_identity and S is W:
+        Sub = sub_matrix(n)
+        Gamma = Sub.copy()
+        spinv = sub_pinv(n)
+        gram_inv = np.linalg.inv(Sub @ Sub.T)
+        beta = float(np.max(np.diag(Sub.T @ gram_inv @ Sub)))
+        return AttrBasis(n, W, S, Sub, Gamma, True, beta, spinv)
+    # Algorithm 4 general branch (eigh replaces rank-deficient Cholesky).
+    P1 = S - (S @ np.ones((n, 1))) @ np.ones((1, n)) / n
+    M = P1.T @ P1
+    evals, evecs = np.linalg.eigh(M)
+    keep = evals > tol * max(evals.max(), 1.0)
+    L = evecs[:, keep] * np.sqrt(evals[keep])          # M = L Lᵀ
+    Sub = L.T                                          # rows span rowspace(P1), ⟂ 1
+    Gamma = np.eye(Sub.shape[0])
+    spinv = np.linalg.pinv(Sub)
+    beta = float(np.max(np.einsum("ij,ij->j", Sub, Sub)))   # Γ=I ⇒ diag SubᵀSub
+    return AttrBasis(n, W, S, Sub, Gamma, False, beta, spinv)
+
+
+@dataclass
+class PlusSchema:
+    """Domain + per-attribute (W_i, S_i) bases for ResidualPlanner+."""
+
+    domain: Domain
+    bases: Tuple[AttrBasis, ...]
+
+    @staticmethod
+    def create(domain: Domain, kinds: Sequence[str],
+               strategies: Optional[Sequence[Optional[np.ndarray]]] = None,
+               strategy_mode: str = "auto") -> "PlusSchema":
+        """kinds[i] ∈ {identity, prefix, range, total}; strategy_mode ∈
+        {w (S=W), hier, auto (p-Identity optimizer, as in the paper §9)}."""
+        bases = []
+        for i, attr in enumerate(domain.attributes):
+            W = build_w(kinds[i], attr.size)
+            S = None if strategies is None else strategies[i]
+            if S is None and kinds[i] != "identity":
+                if strategy_mode == "hier":
+                    S = s_hierarchical(attr.size)
+                elif strategy_mode == "auto":
+                    from repro.baselines.hdmm import opt_pidentity_projected
+                    S = opt_pidentity_projected(W)
+                # "w": S stays None -> W
+            bases.append(attr_basis(W, S))
+        return PlusSchema(domain, tuple(bases))
+
+    def residual_size(self, clique: Clique) -> int:
+        out = 1
+        for i in clique:
+            out *= self.bases[i].Sub.shape[0]
+        return out
+
+    def query_rows(self, clique: Clique) -> int:
+        out = 1
+        for i in clique:
+            out *= self.bases[i].W.shape[0]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# pcost / variance coefficients (Thms 7 & 8) and selection
+# ---------------------------------------------------------------------------
+
+def p_coeff_plus(schema: PlusSchema, clique: Clique) -> float:
+    out = 1.0
+    for i in clique:
+        out *= schema.bases[i].beta
+    return out
+
+
+def sov_coeff_plus(schema: PlusSchema, sub_clique: Clique, clique: Clique) -> float:
+    """Coefficient of σ²_{A'} in SoV(Q_Ã) (Thm 8)."""
+    if not set(sub_clique) <= set(clique):
+        raise ValueError("not a subset")
+    out = 1.0
+    for i in sub_clique:
+        out *= schema.bases[i].fnorm2
+    for j in set(clique) - set(sub_clique):
+        out *= schema.bases[j].wones2
+    return out
+
+
+def cell_variances_plus(schema: PlusSchema, sigmas: Mapping[Clique, float],
+                        clique: Clique) -> np.ndarray:
+    """Exact per-cell variance vector of the reconstructed answer to Q_Ã.
+
+    diag(⊗_i Ψ_i Ψ_iᵀ) = ⊗_i diag(Ψ_i Ψ_iᵀ): per-axis diagonal vectors kron'd.
+    """
+    n_rows = schema.query_rows(clique)
+    out = np.zeros(n_rows)
+    for sub in subsets(clique):
+        diag = np.ones(1)
+        for i in clique:
+            b = schema.bases[i]
+            if i in set(sub):
+                psi = b.W @ b.sub_pinv @ b.Gamma
+            else:
+                psi = (b.W @ np.ones((b.n, 1))) / b.n
+            diag = np.kron(diag, np.einsum("ij,ij->i", psi, psi))
+        out += sigmas[sub] * diag
+    return out
+
+
+@dataclass
+class PlusPlan:
+    schema: PlusSchema
+    workload: MarginalWorkload
+    cliques: List[Clique]
+    sigmas: Dict[Clique, float]
+    objective: str
+    pcost: float
+    loss_value: float
+
+    def sov(self, clique: Clique) -> float:
+        return sum(self.sigmas[sub] * sov_coeff_plus(self.schema, sub, clique)
+                   for sub in subsets(clique))
+
+    def rmse(self) -> float:
+        tot = sum(self.sov(c) for c in self.workload.cliques)
+        cells = sum(self.schema.query_rows(c) for c in self.workload.cliques)
+        return math.sqrt(tot / cells)
+
+    def max_cell_variance(self) -> float:
+        return max(float(cell_variances_plus(self.schema, self.sigmas, c).max())
+                   for c in self.workload.cliques)
+
+
+def select_plus(workload: MarginalWorkload, schema: PlusSchema,
+                pcost_budget: float = 1.0, objective: str = "sum_of_variances",
+                weights: Optional[Mapping[Clique, float]] = None,
+                steps: int = 3000, lr: float = 0.05) -> PlusPlan:
+    """Selection for RP+ workloads.  SoV is closed form (Lemma 2 applies verbatim
+    with generalized p_A, v_A); max_variance uses the scale-invariant solver on
+    the exact per-cell variance diagonals."""
+    cl = closure(workload.cliques)
+    index = {c: i for i, c in enumerate(cl)}
+    p = np.array([p_coeff_plus(schema, c) for c in cl])
+    v = np.zeros(len(cl))
+    for wc in workload.cliques:
+        imp = float((weights or {}).get(wc, workload.weight(wc)))
+        for sub in subsets(wc):
+            v[index[sub]] += imp * sov_coeff_plus(schema, sub, wc)
+
+    if objective in ("sum_of_variances", "sov", "rmse"):
+        pos = v > 0
+        n_zero = int((~pos).sum())
+        eps_share = 1e-9 * pcost_budget if n_zero else 0.0
+        c_eff = pcost_budget - eps_share * n_zero
+        T = float(np.sqrt(v[pos] * p[pos]).sum()) ** 2 / c_eff
+        sig = np.zeros(len(cl))
+        sig[pos] = np.sqrt(T * p[pos] / (c_eff * v[pos]))
+        if n_zero:
+            sig[~pos] = p[~pos] / eps_share
+        sigmas = {c_: float(s) for c_, s in zip(cl, sig)}
+        plan = PlusPlan(schema, workload, cl, sigmas, objective,
+                        pcost=float(np.sum(p / sig)), loss_value=float(np.dot(v, sig)))
+        return plan
+
+    if objective in ("max_variance", "maxvar"):
+        # Per-cell variance rows: Var_cell = D u with D (total_cells x |closure|).
+        rows, cols, vals = [], [], []
+        row0 = 0
+        for wc in workload.cliques:
+            imp = float((weights or {}).get(wc, workload.weight(wc)))
+            ncells = schema.query_rows(wc)
+            for sub in subsets(wc):
+                diag = np.ones(1)
+                for i in wc:
+                    b = schema.bases[i]
+                    psi = (b.W @ b.sub_pinv @ b.Gamma) if i in set(sub) \
+                        else (b.W @ np.ones((b.n, 1))) / b.n
+                    diag = np.kron(diag, np.einsum("ij,ij->i", psi, psi))
+                for r in range(ncells):
+                    if diag[r] != 0.0:
+                        rows.append(row0 + r)
+                        cols.append(index[sub])
+                        vals.append(diag[r] / imp)
+            row0 += ncells
+        m = row0
+        rows_j = jnp.asarray(np.array(rows, np.int32))
+        cols_j = jnp.asarray(np.array(cols, np.int32))
+        vals_j = jnp.asarray(np.array(vals))
+        p_j = jnp.asarray(p)
+
+        warm_sig = np.sqrt(np.maximum(p, 1e-12) / np.maximum(v, 1e-12))
+        warm_sig *= float(np.sum(p / warm_sig))  # normalize pcost to 1 then scale
+        theta0 = jnp.log(jnp.asarray(warm_sig / pcost_budget))
+        tau0 = float(np.median(vals)) * float(np.exp(theta0).mean()) + 1e-12
+
+        def smooth_obj(theta, tau):
+            u = jnp.exp(theta)
+            var = jax.ops.segment_sum(vals_j * u[cols_j], rows_j, num_segments=m)
+            L = tau * jax.scipy.special.logsumexp(var / tau)
+            return jnp.log(jnp.sum(p_j / u)) + jnp.log(L)
+
+        @jax.jit
+        def run(theta0):
+            def step(carry, i):
+                theta, mo, ve = carry
+                tau = tau0 * 10.0 ** (-3.0 * i / steps)
+                g = jax.grad(smooth_obj)(theta, tau)
+                mo = 0.9 * mo + 0.1 * g
+                ve = 0.999 * ve + 0.001 * g * g
+                mh = mo / (1 - 0.9 ** (i + 1.0))
+                vh = ve / (1 - 0.999 ** (i + 1.0))
+                return (theta - lr * mh / (jnp.sqrt(vh) + 1e-9), mo, ve), None
+            (theta, _, _), _ = jax.lax.scan(step, (theta0, jnp.zeros_like(theta0),
+                                                   jnp.zeros_like(theta0)),
+                                            jnp.arange(steps))
+            return theta
+
+        u = np.exp(np.asarray(run(theta0), dtype=np.float64))
+        u *= float(np.sum(p / u)) / pcost_budget
+        sigmas = {c_: float(s) for c_, s in zip(cl, u)}
+        plan = PlusPlan(schema, workload, cl, sigmas, objective,
+                        pcost=float(np.sum(p / u)), loss_value=0.0)
+        plan.loss_value = plan.max_cell_variance()
+        return plan
+
+    raise ValueError(objective)
+
+
+# ---------------------------------------------------------------------------
+# Measurement (Alg 5) and reconstruction (Alg 6)
+# ---------------------------------------------------------------------------
+
+def measure_plus_np(plan: PlusPlan, marginals: Mapping[Clique, np.ndarray],
+                    rng) -> Dict[Clique, Measurement]:
+    out: Dict[Clique, Measurement] = {}
+    schema = plan.schema
+    for clique in plan.cliques:
+        dims = [schema.bases[i].n for i in clique]
+        v = np.asarray(marginals[clique], dtype=np.float64).reshape(-1)
+        sigma = math.sqrt(plan.sigmas[clique])
+        if not clique:
+            out[clique] = Measurement(clique, v + sigma * rng.standard_normal(1),
+                                      plan.sigmas[clique])
+            continue
+        h1 = [schema.bases[i].Sub for i in clique]
+        h2 = [schema.bases[i].Gamma for i in clique]
+        zdims = [g.shape[1] for g in h2]
+        z = rng.standard_normal(int(np.prod(zdims)))
+        hv = kron_matvec_np(h1, v, dims)
+        hz = kron_matvec_np(h2, z, zdims)
+        out[clique] = Measurement(clique, hv + sigma * hz, plan.sigmas[clique])
+    return out
+
+
+def reconstruct_plus(plan: PlusPlan, measurements: Mapping[Clique, Measurement],
+                     clique: Clique) -> np.ndarray:
+    """Algorithm 6: residual combine (as in Alg 2) then apply Ŵ = ⊗ W_i."""
+    schema = plan.schema
+    q = None
+    for sub in subsets(clique):
+        omega = np.asarray(measurements[sub].omega, dtype=np.float64).reshape(-1)
+        if not clique:
+            term = omega
+        else:
+            factors, in_dims = [], []
+            for i in clique:
+                b = schema.bases[i]
+                if i in set(sub):
+                    factors.append(b.sub_pinv)
+                    in_dims.append(b.Sub.shape[0])
+                else:
+                    factors.append(np.full((b.n, 1), 1.0 / b.n))
+                    in_dims.append(1)
+            term = kron_matvec_np(factors, omega, in_dims)
+        q = term if q is None else q + term
+    if not clique:
+        return q
+    wfacs = [schema.bases[i].W for i in clique]
+    return kron_matvec_np(wfacs, q, [schema.bases[i].n for i in clique])

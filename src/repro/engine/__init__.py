@@ -1,0 +1,2 @@
+from .sharded import sharded_marginals, sharded_measure
+from .corpus_stats import corpus_marginal_release

@@ -1,0 +1,39 @@
+"""DP release of training-corpus statistics through ResidualPlanner.
+
+The plane-A ↔ plane-B integration: document-level attributes of the LM
+training stream (source, language bucket, length bucket, quality bucket,
+expert-routing bucket, …) form a tabular domain; curators get unbiased noisy
+marginals over it — e.g. source × length tables, or expert × domain tables
+for MoE routing audits — with the optimal mechanism and exact variances,
+while the privacy budget is shared with DP-SGD via the common accountant.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Domain, MarginalWorkload, PrivacyBudget,
+                        reconstruct_all, select)
+from repro.core.mechanism import pcost_of_plan
+from .sharded import sharded_measure
+
+
+def corpus_marginal_release(domain: Domain, workload: MarginalWorkload,
+                            records: jnp.ndarray, budget: PrivacyBudget,
+                            pcost: float, key: jax.Array,
+                            objective: str = "sum_of_variances",
+                            mesh=None) -> Tuple[Dict, Dict, Dict]:
+    """Select → (sharded) measure → reconstruct; charges the shared budget.
+
+    Returns (noisy marginal tables, per-marginal variances, privacy report).
+    """
+    plan = select(workload, pcost_budget=pcost, objective=objective)
+    budget.charge(pcost_of_plan(plan))
+    meas = sharded_measure(plan, records, key, mesh)
+    tables = reconstruct_all(plan, meas)
+    variances = plan.workload_variances()
+    return tables, variances, budget.report()

@@ -1,0 +1,2 @@
+from .ops import kron_matvec_kernel, residual_measure_kernel
+from .ref import kron_matvec_ref, residual_measure_ref

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the kron_matvec kernels."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.kron import kron_matvec
+
+
+def kron_matvec_ref(factors: Sequence, x: jnp.ndarray,
+                    dims: Sequence[int]) -> jnp.ndarray:
+    """(⊗_i factors[i]) x — reshape + tensordot reference implementation."""
+    return kron_matvec(factors, x, dims)
+
+
+def residual_measure_ref(factors: Sequence, v: jnp.ndarray, z: jnp.ndarray,
+                         sigma: float, dims: Sequence[int]) -> jnp.ndarray:
+    """H v + σ H z  (Alg 1 measurement) via two reference matvecs."""
+    return kron_matvec(factors, v, dims) + sigma * kron_matvec(factors, z, dims)

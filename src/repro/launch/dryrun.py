@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver builds the production mesh, the model, the full
+sharding trees (params / optimizer state / caches / inputs), lowers the real
+step (train_step for train shapes, prefill / decode_step for serving shapes),
+compiles it, and records memory_analysis + cost_analysis + per-collective
+byte counts parsed from the post-SPMD HLO into a JSON artifact that
+roofline/analyze.py consumes.
+
+Run one cell:    python -m repro.launch.dryrun --arch yi-34b --shape train_4k --mesh single
+Run everything:  python -m repro.launch.dryrun --all          (subprocess per cell)
+"""
+import argparse
+import json
+import math
+import re
+import subprocess
+import sys
+import time
+import traceback
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS
+from repro.configs.shapes import (SHAPES, TRAIN_MICROBATCHES, cell_is_applicable,
+                                  input_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.models import Model, get_config
+from repro.models.config import ModelConfig
+from repro.models.sharding import DEFAULT_RULES, sharding_rules, spec_for
+from repro.models.transformer import cache_axes, cache_shape_structs
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes_from_hlo(hlo_text: str):
+    """Sum output-buffer bytes of every collective op (per-device, post-SPMD)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    counts = {c: 0 for c in _COLLECTIVES}
+    pat = re.compile(
+        r"=\s*(\([^)]*\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s+"
+        r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+        r"(-start)?\(")
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for m in pat.finditer(hlo_text):
+        ty, op = m.group(1), m.group(2)
+        nbytes = 0
+        for dt, dims in shape_pat.findall(ty):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    # '-done' ops carry no new bytes; '-start' counted above.
+    return out, counts
+
+
+def _cost_dict(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and not k.startswith("utilization")}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _memory_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:  # noqa: BLE001
+        return {"error": str(e)}
+
+
+def _axes_to_sharding(mesh, axes_tree, rules=None):
+    return jax.tree_util.tree_map(
+        lambda axes: spec_for(mesh, *axes, rules=rules), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def _opt_axes_like(param_axes, int8: bool):
+    def one(axes):
+        if int8:
+            return {"q": axes, "s": axes[:-1] + (None,)}
+        return axes
+    moment = jax.tree_util.tree_map(
+        one, param_axes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+    return {"m": moment, "v": moment, "count": ()}
+
+
+def _pick_microbatches(target: int, global_batch: int, batch_shards: int) -> int:
+    m = min(target, global_batch)
+    while m > 1 and (global_batch // m) % batch_shards != 0:
+        m //= 2
+    return max(m, 1)
+
+
+def shape_rules(shape: str, cfg: ModelConfig):
+    """Per-shape logical-rule overrides (divisibility-safe; DESIGN.md §6)."""
+    rules = dict(DEFAULT_RULES)
+    if shape == "long_500k":
+        rules["batch"] = None                        # batch = 1
+        rules["kv_seq"] = ("data", "model")          # shard the huge state/cache
+        rules["heads"] = None
+    if cfg.vocab_size % 16 != 0:
+        # whisper (51865): vocab indivisible by the model axis → replicate the
+        # (small) embedding/head instead of sharding them.
+        rules["vocab"] = None
+    return rules
+
+
+def build_cell(arch: str, shape: str, multi_pod: bool,
+               cache_dtype: str = "bfloat16",
+               microbatches_override: int = 0):
+    cfg = get_config(arch)
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sh = SHAPES[shape]
+    rules = shape_rules(shape, cfg)
+    batch_shards = math.prod(
+        mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names)
+
+    specs = input_specs(arch, shape)
+    pdt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    params_structs = model.param_shapes()
+    params_shardings = _axes_to_sharding(mesh, model.param_axes(), rules)
+
+    def in_shard_for(name):
+        if name in ("tokens", "labels"):
+            return spec_for(mesh, "batch", None, rules=rules)
+        if name == "embeds":
+            return spec_for(mesh, "batch", None, None, rules=rules)
+        if name == "enc_embeds":
+            return spec_for(mesh, "batch", None, None, rules=rules)
+        if name == "pos":
+            return spec_for(mesh, rules=rules)
+        raise KeyError(name)
+
+    if sh["kind"] == "train":
+        opt_cfg = AdamWConfig(int8_states=(cfg.param_dtype == "bfloat16"))
+        micro = _pick_microbatches(
+            microbatches_override or TRAIN_MICROBATCHES.get(arch, 4),
+            sh["global_batch"], batch_shards)
+        step = make_train_step(model, opt_cfg, microbatches=micro, remat=True)
+        opt_structs = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg),
+                                     params_structs)
+        state_structs = {"params": params_structs, "opt": opt_structs,
+                         "rng": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+        opt_shardings = _axes_to_sharding(
+            mesh, _opt_axes_like(model.param_axes(), opt_cfg.int8_states), rules)
+        state_shardings = {"params": params_shardings, "opt": opt_shardings,
+                           "rng": NamedSharding(mesh, P())}
+        batch_structs = {k: specs[k] for k in specs}
+        batch_shardings = {k: in_shard_for(k) for k in specs}
+        fn = jax.jit(step, in_shardings=(state_shardings, batch_shardings),
+                     out_shardings=(state_shardings, None),
+                     donate_argnums=(0,))      # state buffers update in place
+        args = (state_structs, batch_structs)
+        extra = {"microbatches": micro, "optimizer_int8": opt_cfg.int8_states}
+    elif sh["kind"] == "prefill":
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+        batch_structs = {k: specs[k] for k in specs}
+        batch_shardings = {k: in_shard_for(k) for k in specs}
+        fn = jax.jit(prefill, in_shardings=(params_shardings, batch_shardings),
+                     out_shardings=None)
+        args = (params_structs, batch_structs)
+        extra = {}
+    else:  # decode
+        B, S = sh["global_batch"], sh["seq_len"]
+        cdt = getattr(jnp, cache_dtype)
+        cache_structs = cache_shape_structs(cfg, B, S, dtype=cdt)
+        cache_shardings = _axes_to_sharding(mesh, cache_axes(cfg, B, S), rules)
+
+        def decode(params, tokens, caches, pos):
+            return model.decode_step(params, tokens, caches, pos)
+        fn = jax.jit(decode,
+                     in_shardings=(params_shardings,
+                                   spec_for(mesh, "batch", None, rules=rules),
+                                   cache_shardings,
+                                   NamedSharding(mesh, P())),
+                     out_shardings=(None, cache_shardings),
+                     donate_argnums=(2,))      # caches update in place
+        args = (params_structs, specs["tokens"], cache_structs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        extra = {}
+    return cfg, model, mesh, rules, fn, args, extra
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """MODEL_FLOPS convention: 6·N_active·tokens (train) / 2·N_active·tokens
+    (inference); attention flops excluded."""
+    sh = SHAPES[shape]
+    n_active = cfg.active_params_estimate()
+    if sh["kind"] == "train":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 6.0 * n_active * tokens
+    if sh["kind"] == "prefill":
+        tokens = sh["global_batch"] * sh["seq_len"]
+        return 2.0 * n_active * tokens
+    tokens = sh["global_batch"]            # one new token per sequence
+    return 2.0 * n_active * tokens
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             save_hlo: bool = False, cache_dtype: str = "bfloat16",
+             microbatches_override: int = 0) -> dict:
+    multi_pod = mesh_kind == "multi"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+           "chips": 512 if multi_pod else 256,
+           "cache_dtype": cache_dtype}
+    ok, why = cell_is_applicable(arch, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+    try:
+        t0 = time.time()
+        cfg, model, mesh, rules, fn, args, extra = build_cell(
+            arch, shape, multi_pod, cache_dtype=cache_dtype,
+            microbatches_override=microbatches_override)
+        rec.update(extra)
+        with sharding_rules(mesh, rules):
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["cost_analysis"] = _cost_dict(compiled)
+        rec["memory_analysis"] = _memory_dict(compiled)
+        hlo = compiled.as_text()
+        rec["hlo_chars"] = len(hlo)
+        cb, cc = collective_bytes_from_hlo(hlo)
+        rec["collective_bytes_per_device"] = cb
+        rec["collective_counts"] = cc
+        # loop-aware accounting (XLA cost_analysis counts while bodies once)
+        from repro.roofline.hlo_stats import hlo_stats
+        rec["hlo_stats"] = hlo_stats(hlo)
+        rec["n_params"] = cfg.n_params_estimate()
+        rec["n_active_params"] = cfg.active_params_estimate()
+        rec["model_flops"] = model_flops(cfg, shape)
+        rec["status"] = "ok"
+        if save_hlo:
+            with open(os.path.join(out_dir, f"{arch}__{shape}__{mesh_kind}.hlo"),
+                      "w") as f:
+                f.write(hlo)
+        print(f"[dryrun] {arch} {shape} {mesh_kind}: OK "
+              f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        print("  memory_analysis:", rec["memory_analysis"])
+        print("  cost_analysis flops:", rec["cost_analysis"].get("flops"))
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch} {shape} {mesh_kind}: FAILED {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    # §Perf hillclimb knobs
+    ap.add_argument("--cache-dtype", default="bfloat16",
+                    choices=["bfloat16", "float8_e4m3fn"])
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--remat-policy", default="dots",
+                    choices=["dots", "dots+kv", "nothing"])
+    ap.add_argument("--attn-shard", default="seq", choices=["seq", "heads"])
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        cells = [(a, s, m) for a in ARCH_IDS for s in SHAPES
+                 for m in ("single", "multi")]
+        for a, s, m in cells:
+            path = os.path.join(args.out, f"{a}__{s}__{m}.json")
+            if os.path.exists(path):
+                st = json.load(open(path)).get("status")
+                if st in ("ok", "skipped"):
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", s, "--mesh", m, "--out", args.out]
+            try:
+                subprocess.run(cmd, timeout=args.timeout, check=False)
+            except subprocess.TimeoutExpired:
+                with open(path, "w") as f:
+                    json.dump({"arch": a, "shape": s, "mesh": m,
+                               "status": "timeout"}, f)
+        return
+
+    from repro.configs import load_all
+    load_all()
+    from repro.models.transformer import set_remat_policy
+    set_remat_policy(args.remat_policy)
+    from repro.models.layers import set_attn_sharding
+    set_attn_sharding(args.attn_shard)
+    rec = run_cell(args.arch, args.shape, args.mesh, args.out, args.save_hlo,
+                   cache_dtype=args.cache_dtype,
+                   microbatches_override=args.microbatches)
+    rec["remat_policy"] = args.remat_policy
+    rec["attn_shard"] = args.attn_shard
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}{args.suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

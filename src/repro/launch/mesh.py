@@ -1,0 +1,22 @@
+"""Production mesh definitions.
+
+Functions (not module-level constants) so importing this module never touches
+jax device state.  Single pod: 16×16 = 256 chips (v5e pod); multi-pod adds a
+leading 'pod' axis: 2×16×16 = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1×N (data, model) mesh — used by
+    CPU examples and smoke tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

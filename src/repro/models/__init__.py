@@ -1,0 +1,5 @@
+from .config import ModelConfig, MoEConfig, get_config, list_configs, register
+from .transformer import (Model, cache_axes, cache_defs, cache_shape_structs,
+                          init_cache, model_defs)
+
+__all__ = [n for n in dir() if not n.startswith("_")]

@@ -1,0 +1,439 @@
+"""Core layers: norms, RoPE, memory-efficient attention (causal / local / decode
+split-K), GQA / MLA blocks, SwiGLU — pure functions over param pytrees.
+
+Parameter definitions are single-sourced as ``PDef`` leaves (shape, logical
+axes, init scale); ``init_from_defs`` materializes real arrays, dry-runs use
+``jax.eval_shape`` over the same function, and shardings come from the axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import logical
+
+
+class PDef(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    scale: float = 1.0          # stddev multiplier on 1/sqrt(fan_in)
+    init: str = "normal"        # normal | zeros | ones
+
+
+def is_pdef(x) -> bool:
+    return isinstance(x, PDef)
+
+
+def init_from_defs(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a param pytree from PDef leaves (deterministic per-path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_pdef)
+    out = []
+    for i, pd in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if pd.init == "zeros":
+            out.append(jnp.zeros(pd.shape, dtype))
+        elif pd.init == "ones":
+            out.append(jnp.ones(pd.shape, dtype))
+        else:
+            fan_in = pd.shape[-2] if len(pd.shape) >= 2 else pd.shape[-1]
+            std = pd.scale / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, pd.shape, jnp.float32) * std).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shape_structs_from_defs(defs, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda pd: jax.ShapeDtypeStruct(pd.shape, dtype), defs, is_leaf=is_pdef)
+
+
+def axes_from_defs(defs):
+    return jax.tree_util.tree_map(lambda pd: pd.axes, defs, is_leaf=is_pdef)
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def head_rms_norm(x, w, eps: float = 1e-6):
+    """qk-norm: RMS over the head_dim axis of (..., H, dh)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, H, dh) or (..., H, dh) with matching positions (..., S) / scalar."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                                          # broadcast over H
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([x1f * cos - x2f * sin, x1f * sin + x2f * cos],
+                           axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient attention (pure XLA): online-softmax scan over KV blocks
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                        window: int = 0, kv_block: int = 1024,
+                        banded: bool = False):
+    """softmax(QKᵀ/√dh)V without materializing the S×S score matrix.
+
+    q: (B, S, H, dh);  k, v: (B, T, Hkv, dh);  GQA via head grouping.
+    q_pos: (S,), kv_pos: (T,) absolute positions for causal/local masks.
+    ``banded=True`` skips KV blocks that are entirely masked for every query
+    (the §Perf causal-FLOPs optimization) by zeroing their contribution with a
+    block-level predicate — XLA-visible FLOPs are still spent unless the block
+    loop itself is shortened, so banded mode *restructures the loop per
+    diagonal*; see ``banded_causal_attention``.
+    """
+    B, S, H, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    nkv = -(-T // kv_block)
+    pad = nkv * kv_block - T
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-(10 ** 9))
+    qg = q.reshape(B, S, Hkv, G, dh)
+    kb = k.reshape(B, nkv, kv_block, Hkv, dh)
+    vb = v.reshape(B, nkv, kv_block, Hkv, dh)
+    pb = kv_pos.reshape(nkv, kv_block)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, pj = inp
+        s = jnp.einsum("bskgd,btkd->bskgt", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask_qt = None
+        if causal:
+            mask_qt = pj[None, :] <= q_pos[:, None]              # (S, kvb)
+        if window:
+            w_mask = pj[None, :] > q_pos[:, None] - window
+            mask_qt = w_mask if mask_qt is None else (mask_qt & w_mask)
+        if pad and not causal:
+            v_mask = (pj >= 0)[None, :] | jnp.zeros((S, 1), bool)
+            mask_qt = v_mask if mask_qt is None else (mask_qt & v_mask)
+        if mask_qt is not None:
+            s = jnp.where(mask_qt[None, :, None, None, :], s, -jnp.inf)
+        mj = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, mj)
+        # fully-masked blocks keep m_new = -inf: guard exp(-inf - -inf)
+        corr = jnp.where(jnp.isfinite(m_new), jnp.exp(m - m_new), 0.0)
+        p = jnp.exp(s - jnp.where(jnp.isfinite(m_new), m_new, 0.0)[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, Hkv, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, S, Hkv, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def local_attention(q, k, v, q_pos, kv_pos, *, window: int):
+    """Chunked sliding-window causal attention: O(S·2W) compute and memory.
+
+    Sequence is cut into W-sized chunks; chunk i attends to chunks {i-1, i}
+    with an exact (q_pos - kv_pos) ∈ [0, W) mask.
+    """
+    B, S0, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    W = window
+    pad = (-S0) % W
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pad), constant_values=-(10 ** 9))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-(2 * 10 ** 9))
+    S = S0 + pad
+    nc = S // W
+    scale = 1.0 / math.sqrt(dh)
+    qc = q.reshape(B, nc, W, Hkv, G, dh)
+    kc = k.reshape(B, nc, W, Hkv, dh)
+    vc = v.reshape(B, nc, W, Hkv, dh)
+    kprev = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    vprev = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    k2 = jnp.concatenate([kprev, kc], axis=2)       # (B, nc, 2W, Hkv, dh)
+    v2 = jnp.concatenate([vprev, vc], axis=2)
+    s = jnp.einsum("bcwkgd,bctkd->bckgwt", qc, k2,
+                   preferred_element_type=jnp.float32) * scale
+    qp = q_pos.reshape(nc, W)
+    kp = kv_pos.reshape(nc, W)
+    kp2 = jnp.concatenate([jnp.pad(kp, ((1, 0), (0, 0)),
+                                   constant_values=-(10 ** 9))[:-1], kp], axis=1)
+    diff = qp[:, :, None] - kp2[:, None, :]          # (nc, W, 2W)
+    mask = (diff >= 0) & (diff < W)
+    s = jnp.where(mask[None, :, None, None, :, :], s, -jnp.inf)
+    # pad-safe softmax (fully-masked rows → 0, not NaN)
+    smax = jnp.max(s, axis=-1, keepdims=True, initial=-1e30)
+    p = jnp.exp(s - smax)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bckgwt,bctkd->bcwkgd", p.astype(v2.dtype), v2,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, dh)[:, :S0].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
+    """Single-step attention against a cache (split-K under the mesh: the cache
+    length axis carries the ``kv_seq → model`` sharding; GSPMD turns the
+    softmax/sum reductions into cross-shard collectives)."""
+    B, _, H, dh = q.shape
+    T, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Hkv, G, dh)
+    # caches may be stored quantized (fp8 hillclimb); upcast at the MXU edge
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(T)
+    mask = idx[None, None, None, :] <= pos
+    if window:
+        mask = jnp.logical_and(mask, idx[None, None, None, :] > pos - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention blocks (GQA and MLA)
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg) -> Dict[str, Any]:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    defs: Dict[str, Any] = {
+        "wq": PDef((d, qd), ("dmodel_fsdp", "qkv")),
+        "wk": PDef((d, kvd), ("dmodel_fsdp", "qkv")),
+        "wv": PDef((d, kvd), ("dmodel_fsdp", "qkv")),
+        "wo": PDef((qd, d), ("qkv", "dmodel_fsdp")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = PDef((qd,), ("qkv",), init="zeros")
+        defs["bk"] = PDef((kvd,), ("qkv",), init="zeros")
+        defs["bv"] = PDef((kvd,), ("qkv",), init="zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = PDef((cfg.head_dim,), (None,), init="ones")
+        defs["k_norm"] = PDef((cfg.head_dim,), (None,), init="ones")
+    return defs
+
+
+# §Perf T1c: attention-region sharding mode.  'seq' (default) shards the
+# query sequence over 'model' (divisibility-safe everywhere, but pays 4
+# residual-stream reshards per layer).  'heads' pads the GQA group count so
+# (Hkv · G') divides the model axis and shards *heads* instead — no
+# activation reshard, + (G'/G − 1) extra attention FLOPs.  Falls back to
+# 'seq' when padding waste would exceed 25%.
+ATTN_SHARDING = ["seq"]
+
+
+def set_attn_sharding(mode: str):
+    assert mode in ("seq", "heads")
+    ATTN_SHARDING[0] = mode
+
+
+def _heads_padding(H: int, Hkv: int, msize: int):
+    """Smallest padded group count G' with (Hkv·G') % msize == 0, or None."""
+    G = H // Hkv
+    gp = G
+    while (Hkv * gp) % msize != 0:
+        gp += 1
+        if gp > 2 * G:
+            return None
+    return gp if gp / G <= 1.25 else None
+
+
+def attn_apply(p, x, *, cfg, mode: str, cache=None, pos=None,
+               local: bool = False):
+    """x: (B, S, D).  Returns (y, new_cache)."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    q = xq @ p["wq"].astype(cdt)
+    k = xq @ p["wk"].astype(cdt)
+    v = xq @ p["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, Hkv, dh)
+    v = v.reshape(B, S, Hkv, dh)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        positions = pos  # scalar
+        q = rope(q, jnp.asarray(pos)[None], cfg.rope_theta) \
+            if cfg.rope_theta else q
+        k = rope(k, jnp.asarray(pos)[None], cfg.rope_theta) \
+            if cfg.rope_theta else k
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k_cache = logical(k_cache, "batch", "kv_seq", "heads", None)
+        v_cache = logical(v_cache, "batch", "kv_seq", "heads", None)
+        o = decode_attention(q, k_cache, v_cache, pos,
+                             window=cfg.local_window if local else 0)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        positions = jnp.arange(S)
+        if cfg.rope_theta:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+        # name the (to-be-all-gathered) K/V so the 'dots+kv' remat policy can
+        # save them across the backward pass (§Perf hillclimb B)
+        k = jax.ad_checkpoint.checkpoint_name(k, "kv")
+        v = jax.ad_checkpoint.checkpoint_name(v, "kv")
+        from .sharding import current_mesh
+        mesh = current_mesh()
+        gp = None
+        if (ATTN_SHARDING[0] == "heads" and not local and mesh is not None
+                and "model" in mesh.axis_names):
+            gp = _heads_padding(H, Hkv, mesh.shape["model"])
+        if gp is not None:
+            G = H // Hkv
+            Hp = Hkv * gp
+            qg = q.reshape(B, S, Hkv, G, dh)
+            qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, gp - G), (0, 0)))
+            q = qg.reshape(B, S, Hp, dh)
+            q = logical(q, "batch", None, "heads_shard", None)
+            # repeat KV to the padded head count so the single head axis
+            # shards |model|-ways cleanly (a (Hkv, G') reshape cannot)
+            k = jnp.repeat(k, gp, axis=2)
+            v = jnp.repeat(v, gp, axis=2)
+            k = logical(k, "batch", None, "heads_shard", None)
+            v = logical(v, "batch", None, "heads_shard", None)
+            o = blockwise_attention(q, k, v, positions, positions, causal=True)
+            o = logical(o, "batch", None, "heads_shard", None)
+            # zero-padded wo rows kill the (uniform-softmax) padded-head output
+            wo = p["wo"].astype(cdt).reshape(H, dh, -1)
+            wo = jnp.pad(wo, ((0, Hp - H), (0, 0), (0, 0))).reshape(Hp * dh, -1)
+            y = o.reshape(B, S, Hp * dh) @ wo
+            new_cache = {"k": k, "v": v} if mode == "prefill" else None
+            return y.astype(x.dtype), new_cache
+        q = logical(q, "batch", "seq_shard", "heads", None)
+        if local:
+            o = local_attention(q, k, v, positions, positions,
+                                window=cfg.local_window)
+        else:
+            o = blockwise_attention(q, k, v, positions, positions, causal=True)
+        new_cache = {"k": k, "v": v} if mode == "prefill" else None
+    o = logical(o, "batch", "seq_shard", "heads", None)
+    y = o.reshape(B, S, H * dh) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype), new_cache
+
+
+def mla_defs(cfg) -> Dict[str, Any]:
+    d, qd, r = cfg.d_model, cfg.q_dim, cfg.kv_lora_rank
+    return {
+        "wq": PDef((d, qd), ("dmodel_fsdp", "qkv")),
+        "w_dkv": PDef((d, r), ("dmodel_fsdp", "lora")),
+        "w_uk": PDef((r, qd), ("lora", "qkv")),
+        "w_uv": PDef((r, qd), ("lora", "qkv")),
+        "wo": PDef((qd, d), ("qkv", "dmodel_fsdp")),
+    }
+
+
+def mla_apply(p, x, *, cfg, mode: str, cache=None, pos=None):
+    """DeepSeek-style Multi-head Latent Attention with compressed KV cache.
+
+    Train/prefill: decompress K/V and run blockwise attention.
+    Decode: *absorbed* form — scores and values live in the rank-r latent
+    space, the cache holds only c_kv (B, T, r): the paper-faithful system
+    character (tiny cache, extra decode FLOPs).
+    """
+    B, S, D = x.shape
+    H, dh, r = cfg.n_heads, cfg.head_dim, cfg.kv_lora_rank
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    q = (xq @ p["wq"].astype(cdt)).reshape(B, S, H, dh)
+    c_kv = xq @ p["w_dkv"].astype(cdt)                      # (B, S, r)
+
+    if mode == "decode":
+        c_cache = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        c_cache = logical(c_cache, "batch", "kv_seq", "lora")
+        c_comp = c_cache.astype(cdt)        # may be stored quantized (fp8)
+        wuk = p["w_uk"].astype(cdt).reshape(r, H, dh)
+        wuv = p["w_uv"].astype(cdt).reshape(r, H, dh)
+        q_lat = jnp.einsum("bshd,rhd->bshr", q, wuk)        # absorb W_uk into q
+        s = jnp.einsum("bshr,btr->bhst", q_lat, c_comp,
+                       preferred_element_type=jnp.float32) / math.sqrt(dh)
+        idx = jnp.arange(c_cache.shape[1])
+        s = jnp.where(idx[None, None, None, :] <= pos, s, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btr->bshr", pr.astype(cdt), c_comp)
+        o = jnp.einsum("bshr,rhd->bshd", o_lat, wuv)
+        new_cache = {"c_kv": c_cache}
+    else:
+        k = (c_kv @ p["w_uk"].astype(cdt)).reshape(B, S, H, dh)
+        v = (c_kv @ p["w_uv"].astype(cdt)).reshape(B, S, H, dh)
+        positions = jnp.arange(S)
+        q = logical(q, "batch", "seq_shard", "heads", None)
+        o = blockwise_attention(q, k, v, positions, positions, causal=True)
+        new_cache = {"c_kv": c_kv} if mode == "prefill" else None
+    o = logical(o, "batch", "seq_shard", "heads", None)
+    y = o.reshape(B, S, H * dh) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_defs(cfg) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wg": PDef((d, f), ("dmodel_fsdp", "dff")),
+        "wu": PDef((d, f), ("dmodel_fsdp", "dff")),
+        "wo": PDef((f, d), ("dff", "dmodel_fsdp")),
+    }
+
+
+def swiglu_apply(p, x, *, cfg):
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    g = jax.nn.silu(xq @ p["wg"].astype(cdt))
+    u = xq @ p["wu"].astype(cdt)
+    # Megatron TP: the hidden activation shards d_ff over 'model' (seq stays
+    # unsharded here — it is seq-sharded only in the attention region).
+    h = logical(g * u, "batch", None, "dff")
+    return (h @ p["wo"].astype(cdt)).astype(x.dtype)

@@ -1,0 +1,273 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma/Griffin), mLSTM and sLSTM (xLSTM).
+
+Training/prefill paths are parallel over sequence where the math allows
+(associative scan for RG-LRU, chunkwise-parallel for mLSTM); sLSTM is
+inherently sequential (hidden-state feedback into the gates) and uses a
+compact lax.scan.  Decode is a single recurrent step with O(1) state — this
+is what makes these archs eligible for the long_500k cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import PDef
+from .sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin): h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+# ---------------------------------------------------------------------------
+
+RGLRU_C = 8.0
+
+
+def rglru_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    w = cfg.rnn_state_dim or d
+    return {
+        "w_in": PDef((d, w), ("dmodel_fsdp", "rnn_state")),
+        "w_gate": PDef((d, w), ("dmodel_fsdp", "rnn_state")),
+        "w_rec_gate": PDef((d, w), ("dmodel_fsdp", "rnn_state")),
+        "w_inp_gate": PDef((d, w), ("dmodel_fsdp", "rnn_state")),
+        "lam": PDef((w,), ("rnn_state",), init="ones"),
+        "w_out": PDef((w, d), ("rnn_state", "dmodel_fsdp")),
+    }
+
+
+def _rglru_coeffs(p, u, cdt):
+    """Per-step (a_t, b_t) of the linear recurrence h = a⊙h_prev + b."""
+    r = jax.nn.sigmoid((u @ p["w_rec_gate"].astype(cdt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_inp_gate"].astype(cdt)).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    return a, b
+
+
+def rglru_apply(p, x, *, cfg, mode: str, cache=None, pos=None):
+    """x: (B, S, D) → (y, new_cache);  cache = {'h': (B, w)} fp32."""
+    B, S, D = x.shape
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    u = xq @ p["w_in"].astype(cdt)                       # (B, S, w)
+    gate = jax.nn.gelu(xq @ p["w_gate"].astype(cdt))
+    a, b = _rglru_coeffs(p, u, cdt)                      # fp32 (B, S, w)
+
+    if mode == "decode":
+        h_prev = cache["h"]
+        h = a[:, 0] * h_prev + b[:, 0]
+        hs = h[:, None]
+        new_cache = {"h": h}
+    else:
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h0 = cache["h"] if cache is not None else jnp.zeros((B, a.shape[-1]),
+                                                            jnp.float32)
+        hs = a_s * h0[:, None] + b_s                     # (B, S, w)
+        new_cache = {"h": hs[:, -1]} if mode == "prefill" else None
+    y = (hs.astype(cdt) * gate) @ p["w_out"].astype(cdt)
+    return y.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory  C_t = f_t C_{t-1} + i_t v_t k_tᵀ
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg) -> Dict[str, Any]:
+    d, qd = cfg.d_model, cfg.q_dim
+    H = cfg.n_heads
+    return {
+        "wq": PDef((d, qd), ("dmodel_fsdp", "qkv")),
+        "wk": PDef((d, qd), ("dmodel_fsdp", "qkv")),
+        "wv": PDef((d, qd), ("dmodel_fsdp", "qkv")),
+        "w_if": PDef((d, 2 * H), ("dmodel_fsdp", None)),
+        "b_if": PDef((2 * H,), (None,), init="zeros"),
+        "wo": PDef((qd, d), ("qkv", "dmodel_fsdp")),
+    }
+
+
+def _mlstm_chunk(q, k, v, ilog, flog, state):
+    """One chunk of the stabilized chunkwise-parallel mLSTM.
+
+    q,k,v: (B, H, W, dh); ilog/flog: (B, H, W) log input gate / log forget.
+    state: (C, n, m) with C (B,H,dh,dh), n (B,H,dh), m (B,H) — C, n stored at
+    scale exp(m).  Returns (h, new_state), h (B, H, W, dh).
+    """
+    B, H, W, dh = q.shape
+    C, n, m = state
+    b = jnp.cumsum(flog, axis=-1)                         # (B,H,W) inclusive
+    btot = b[..., -1]
+    # intra-chunk log decay: logD[i,j] = b_i - b_j + ilog_j for j <= i
+    logD = b[..., :, None] - b[..., None, :] + ilog[..., None, :]
+    tri = jnp.tril(jnp.ones((W, W), bool))
+    logD = jnp.where(tri, logD, -jnp.inf)
+    inter_log = b + m[..., None]                          # (B,H,W)
+    m_i = jnp.maximum(jnp.max(logD, axis=-1), inter_log)  # (B,H,W)
+    wgt = jnp.exp(logD - m_i[..., None])                  # (B,H,W,W)
+    inter_scale = jnp.exp(inter_log - m_i)                # (B,H,W)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bhwd,bhtd->bhwt", q, k) * scale
+    num = jnp.einsum("bhwt,bhtd->bhwd", wgt * scores, v) \
+        + inter_scale[..., None] * jnp.einsum("bhwd,bhde->bhwe", q * scale, C)
+    # C is stored k-major: C[d, e] = Σ i_t k_d v_e, so q·C = (q·k)·v
+    den_vec = jnp.einsum("bhwt,bhtd->bhwd", wgt, k) + inter_scale[..., None] * n[..., None, :]
+    den = jnp.abs(jnp.einsum("bhwd,bhwd->bhw", q * scale, den_vec))
+    h = num / jnp.maximum(den, jnp.exp(-m_i))[..., None]
+    # state update (stored at scale exp(m_new))
+    upd_log = btot[..., None] - b + ilog                  # (B,H,W)
+    m_new = jnp.maximum(m + btot, jnp.max(upd_log, axis=-1))
+    upd = jnp.exp(upd_log - m_new[..., None])
+    C_new = C * jnp.exp(m + btot - m_new)[..., None, None] \
+        + jnp.einsum("bhw,bhwd,bhwe->bhde", upd, k, v)
+    n_new = n * jnp.exp(m + btot - m_new)[..., None] \
+        + jnp.einsum("bhw,bhwd->bhd", upd, k)
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_apply(p, x, *, cfg, mode: str, cache=None, pos=None, chunk: int = 128):
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    q = (xq @ p["wq"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    k = (xq @ p["wk"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    v = (xq @ p["wv"].astype(cdt)).reshape(B, S, H, dh).transpose(0, 2, 1, 3)
+    gates = (xq @ p["w_if"].astype(cdt) + p["b_if"].astype(cdt)).astype(jnp.float32)
+    ilog = gates[..., :H].transpose(0, 2, 1)              # (B,H,S) input pre-act
+    flog = jax.nn.log_sigmoid(gates[..., H:]).transpose(0, 2, 1)
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+
+    if cache is not None:
+        state = (cache["C"], cache["n"], cache["m"])
+    else:
+        state = (jnp.zeros((B, H, dh, dh), jnp.float32),
+                 jnp.zeros((B, H, dh), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+
+    if mode == "decode":
+        h, state = _mlstm_chunk(q32, k32, v32, ilog, flog, state)
+        hs = h.transpose(0, 2, 1, 3)                      # (B,1,H,dh)
+    else:
+        W = min(chunk, S)
+        assert S % W == 0
+        nc = S // W
+        qs = q32.reshape(B, H, nc, W, dh).transpose(2, 0, 1, 3, 4)
+        ks = k32.reshape(B, H, nc, W, dh).transpose(2, 0, 1, 3, 4)
+        vs = v32.reshape(B, H, nc, W, dh).transpose(2, 0, 1, 3, 4)
+        ils = ilog.reshape(B, H, nc, W).transpose(2, 0, 1, 3)
+        fls = flog.reshape(B, H, nc, W).transpose(2, 0, 1, 3)
+
+        def step(st, inp):
+            h, st = _mlstm_chunk(*inp, st)
+            return st, h
+        state, hs = jax.lax.scan(step, state, (qs, ks, vs, ils, fls))
+        # (nc, B, H, W, dh) → (B, S, H, dh)
+        hs = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, dh).transpose(0, 2, 1, 3)
+
+    new_cache = {"C": state[0], "n": state[1], "m": state[2]} \
+        if mode in ("prefill", "decode") else None
+    y = hs.astype(cdt).reshape(B, S, H * dh) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype), new_cache
+
+
+def mlstm_recurrent_oracle(p, x, *, cfg):
+    """Step-by-step recurrent mLSTM (float32) — test oracle for the chunkwise path."""
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    x32 = x.astype(jnp.float32)
+    q = (x32 @ p["wq"].astype(jnp.float32)).reshape(B, S, H, dh)
+    k = (x32 @ p["wk"].astype(jnp.float32)).reshape(B, S, H, dh)
+    v = (x32 @ p["wv"].astype(jnp.float32)).reshape(B, S, H, dh)
+    gates = x32 @ p["w_if"].astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    ilog = gates[..., :H]
+    flog = jax.nn.log_sigmoid(gates[..., H:])
+    scale = 1.0 / math.sqrt(dh)
+    C = jnp.zeros((B, H, dh, dh))
+    n = jnp.zeros((B, H, dh))
+    m = jnp.full((B, H), -1e30)
+    hs = []
+    for t in range(S):
+        m_new = jnp.maximum(flog[:, t] + m, ilog[:, t])
+        f_ = jnp.exp(flog[:, t] + m - m_new)
+        i_ = jnp.exp(ilog[:, t] - m_new)
+        C = f_[..., None, None] * C + i_[..., None, None] * jnp.einsum(
+            "bhd,bhe->bhde", k[:, t], v[:, t])
+        n = f_[..., None] * n + i_[..., None] * k[:, t]
+        num = jnp.einsum("bhd,bhde->bhe", q[:, t] * scale, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, t] * scale, n))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        hs.append(h)
+        m = m_new
+    hs = jnp.stack(hs, axis=1)                            # (B,S,H,dh)
+    y = hs.reshape(B, S, H * dh) @ p["wo"].astype(jnp.float32)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar memory with hidden-state feedback (sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, dh = cfg.n_heads, cfg.head_dim
+    hd = H * dh
+    return {
+        "w_x": PDef((d, 4 * hd), ("dmodel_fsdp", "qkv")),
+        "r_h": PDef((H, dh, 4 * dh), (None, None, None), scale=0.5),
+        "b": PDef((4 * hd,), (None,), init="zeros"),
+        "wo": PDef((hd, d), ("qkv", "dmodel_fsdp")),
+    }
+
+
+def slstm_apply(p, x, *, cfg, mode: str, cache=None, pos=None):
+    B, S, D = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    hd = H * dh
+    x32 = x.astype(jnp.float32)
+    pre = x32 @ p["w_x"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    pre = pre.reshape(B, S, H, 4 * dh)
+    r_h = p["r_h"].astype(jnp.float32)
+
+    if cache is not None:
+        c0, n0, m0, h0 = cache["c"], cache["n"], cache["m"], cache["h"]
+    else:
+        c0 = jnp.zeros((B, H, dh))
+        n0 = jnp.full((B, H, dh), 1e-6)
+        m0 = jnp.full((B, H, dh), -1e30)
+        h0 = jnp.zeros((B, H, dh))
+
+    def step(carry, pre_t):
+        c, n, m, h = carry
+        g = pre_t + jnp.einsum("bhd,hde->bhe", h, r_h)
+        z_, i_, f_, o_ = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(z_)
+        o = jax.nn.sigmoid(o_)
+        flog = jax.nn.log_sigmoid(f_)
+        m_new = jnp.maximum(flog + m, i_)
+        fs = jnp.exp(flog + m - m_new)
+        is_ = jnp.exp(i_ - m_new)
+        c_new = fs * c + is_ * z
+        n_new = fs * n + is_
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if mode == "decode":
+        carry, h = step((c0, n0, m0, h0), pre[:, 0])
+        hs = h[:, None]
+    else:
+        carry, hs = jax.lax.scan(step, (c0, n0, m0, h0),
+                                 jnp.moveaxis(pre, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)                        # (B,S,H,dh)
+    new_cache = ({"c": carry[0], "n": carry[1], "m": carry[2], "h": carry[3]}
+                 if mode in ("prefill", "decode") else None)
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    y = hs.reshape(B, S, hd).astype(cdt) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype), new_cache

@@ -1,0 +1,100 @@
+"""Logical-axis sharding rules (plane B distribution).
+
+Model code annotates activations/params with *logical* axis names; a rule set
+maps them to mesh axes.  One rule set is divisibility-safe for all 10 assigned
+architectures (see DESIGN.md §6): feature dims shard over ``model``, batch over
+(``pod``, ``data``), sequence over ``model`` in attention/FFN compute regions
+(sequence parallelism), vocab over ``model``, experts over ``model``.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Default logical→mesh rules (single- and multi-pod; 'pod' silently dropped
+# when absent from the mesh).
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,                # embedding-layer seq: replicated
+    "seq_shard": "model",       # sequence-parallel regions (attention/FFN acts)
+    "dmodel": None,
+    "dmodel_fsdp": "data",      # parameter storage: d_model sharded over data
+    "qkv": "model",             # flattened head*head_dim projections
+    "heads": None,              # head axis in attention math: replicated
+    "heads_shard": "model",     # §Perf T1c: padded-head attention sharding
+    "kv_seq": "model",          # decode split-K: cache length over model
+    "dff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_dff": "data",   # expert weights: d_ff slice per data shard
+    "rnn_state": "model",
+    "lora": None,
+}
+
+_local = threading.local()
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_local, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_local, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Activate logical-axis sharding for model code inside this context."""
+    prev = (current_mesh(), current_rules())
+    _local.mesh = mesh
+    _local.rules = dict(DEFAULT_RULES, **(rules or {})) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _local.mesh, _local.rules = prev
+
+
+def _resolve(names: Sequence[Optional[str]], mesh: Mesh, rules: Rules) -> P:
+    axes = []
+    for n in names:
+        if n is None:
+            axes.append(None)
+            continue
+        tgt = rules.get(n, None)
+        if tgt is None:
+            axes.append(None)
+        elif isinstance(tgt, tuple):
+            present = tuple(t for t in tgt if t in mesh.axis_names)
+            axes.append(present if present else None)
+        else:
+            axes.append(tgt if tgt in mesh.axis_names else None)
+    return P(*axes)
+
+
+def logical(x, *names: Optional[str]):
+    """with_sharding_constraint by logical axis names (no-op outside a mesh ctx)."""
+    mesh, rules = current_mesh(), current_rules()
+    if mesh is None or rules is None:
+        return x
+    spec = _resolve(names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def spec_for(mesh: Mesh, *names: Optional[str], rules: Optional[Rules] = None) -> NamedSharding:
+    r = dict(DEFAULT_RULES, **(rules or {}))
+    return NamedSharding(mesh, _resolve(names, mesh, r))
+
+
+def param_spec(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+               rules: Optional[Rules] = None) -> NamedSharding:
+    return spec_for(mesh, *logical_axes, rules=rules)
+
+
+def batch_axis_names(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,416 @@
+"""Model assembly: pattern-scanned decoder (+ optional encoder) over all block
+kinds, with a single param-def tree, cache machinery, and train/prefill/decode
+entry points.
+
+Layers are scanned by *pattern group* (cfg.pattern repeated n_groups times,
+plus an optional tail) so the HLO stays compact for 61-layer/1T-param models,
+and remat wraps each group in training.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (PDef, attn_apply, attn_defs, axes_from_defs,
+                     blockwise_attention, init_from_defs, is_pdef, mla_apply,
+                     mla_defs, rms_norm, shape_structs_from_defs, swiglu_apply,
+                     swiglu_defs)
+from .moe import moe_apply, moe_defs
+from .recurrent import (mlstm_apply, mlstm_defs, rglru_apply, rglru_defs,
+                        slstm_apply, slstm_defs)
+from .sharding import logical
+
+MIXER_DEFS = {
+    "attn": attn_defs, "attn_local": attn_defs, "attn_bidir": attn_defs,
+    "mla": mla_defs, "rglru": rglru_defs, "mlstm": mlstm_defs,
+    "slstm": slstm_defs,
+}
+
+
+def _stack_defs(defs, n: int):
+    return jax.tree_util.tree_map(
+        lambda pd: PDef((n,) + pd.shape, (None,) + pd.axes, pd.scale, pd.init),
+        defs, is_leaf=is_pdef)
+
+
+def _block_defs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    d = {
+        "norm1": PDef((cfg.d_model,), (None,), init="ones"),
+        "mixer": MIXER_DEFS[kind](cfg),
+    }
+    if cfg.ffn == "swiglu" and cfg.d_ff:
+        d["norm2"] = PDef((cfg.d_model,), (None,), init="ones")
+        d["ffn"] = swiglu_defs(cfg)
+    elif cfg.ffn == "moe" and cfg.moe is not None:
+        d["norm2"] = PDef((cfg.d_model,), (None,), init="ones")
+        d["ffn"] = moe_defs(cfg)
+    return d
+
+
+def _xattn_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"norm": PDef((cfg.d_model,), (None,), init="ones"),
+            "attn": attn_defs(cfg)}
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d: Dict[str, Any] = {}
+    if cfg.frontend == "none":
+        d["embed"] = PDef((cfg.vocab_size, cfg.d_model), ("vocab", "dmodel_fsdp"))
+    d["lm_head"] = PDef((cfg.d_model, cfg.vocab_size), ("dmodel_fsdp", "vocab"))
+    d["final_norm"] = PDef((cfg.d_model,), (None,), init="ones")
+    main = {f"{i}:{kind}": _block_defs(cfg, kind)
+            for i, kind in enumerate(cfg.pattern)}
+    if cfg.encoder_layers:
+        for i, _ in enumerate(cfg.pattern):
+            main[f"{i}:xattn"] = _xattn_defs(cfg)
+    d["blocks"] = _stack_defs(main, cfg.n_pattern_groups)
+    if cfg.n_tail:
+        tail = {f"{i}:{kind}": _block_defs(cfg, kind)
+                for i, kind in enumerate(cfg.tail_pattern)}
+        d["tail_blocks"] = _stack_defs(tail, cfg.n_tail)
+    if cfg.encoder_layers:
+        enc = {"0:attn_bidir": _block_defs(cfg, "attn_bidir")}
+        d["encoder_blocks"] = _stack_defs(enc, cfg.encoder_layers)
+        d["encoder_norm"] = PDef((cfg.d_model,), (None,), init="ones")
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def _mixer_cache_defs(cfg: ModelConfig, kind: str, batch: int, seq: int):
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if kind in ("attn", "attn_local"):
+        return {"k": PDef((batch, seq, Hkv, dh), ("batch", "kv_seq", "heads", None)),
+                "v": PDef((batch, seq, Hkv, dh), ("batch", "kv_seq", "heads", None))}
+    if kind == "mla":
+        return {"c_kv": PDef((batch, seq, cfg.kv_lora_rank),
+                             ("batch", "kv_seq", "lora"))}
+    if kind == "rglru":
+        w = cfg.rnn_state_dim or cfg.d_model
+        return {"h": PDef((batch, w), ("batch", "rnn_state"))}
+    if kind == "mlstm":
+        return {"C": PDef((batch, H, dh, dh), ("batch", "heads", None, None)),
+                "n": PDef((batch, H, dh), ("batch", "heads", None)),
+                "m": PDef((batch, H), ("batch", "heads"))}
+    if kind == "slstm":
+        return {k: PDef((batch, H, dh), ("batch", "heads", None))
+                for k in ("c", "n", "m", "h")}
+    raise ValueError(kind)
+
+
+def cache_defs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    main = {f"{i}:{kind}": _mixer_cache_defs(cfg, kind, batch, seq)
+            for i, kind in enumerate(cfg.pattern)}
+    if cfg.encoder_layers:  # decode-time cross-attn K/V from the encoder
+        for i, _ in enumerate(cfg.pattern):
+            main[f"{i}:xattn"] = {
+                "k": PDef((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                          ("batch", None, "heads", None)),
+                "v": PDef((batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim),
+                          ("batch", None, "heads", None))}
+    out = {"blocks": _stack_defs(main, cfg.n_pattern_groups)}
+    if cfg.n_tail:
+        tail = {f"{i}:{kind}": _mixer_cache_defs(cfg, kind, batch, seq)
+                for i, kind in enumerate(cfg.tail_pattern)}
+        out["tail_blocks"] = _stack_defs(tail, cfg.n_tail)
+    return out
+
+
+_KV_CACHE_KEYS = ("k", "v", "c_kv")   # stored in cache dtype; states stay fp32
+
+
+def _cache_leaf_dtype(path, dtype):
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    return dtype if name in _KV_CACHE_KEYS else jnp.float32
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, dtype=jnp.bfloat16):
+    defs = cache_defs(cfg, batch, seq)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, pd: jnp.zeros(pd.shape, _cache_leaf_dtype(path, dtype)),
+        defs, is_leaf=is_pdef)
+
+
+def cache_shape_structs(cfg: ModelConfig, batch: int, seq: int,
+                        dtype=jnp.bfloat16):
+    defs = cache_defs(cfg, batch, seq)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, pd: jax.ShapeDtypeStruct(
+            pd.shape, _cache_leaf_dtype(path, dtype)),
+        defs, is_leaf=is_pdef)
+
+
+def cache_axes(cfg: ModelConfig, batch: int, seq: int):
+    return axes_from_defs(cache_defs(cfg, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+MIXER_APPLY = {
+    "attn": partial(attn_apply, local=False),
+    "attn_local": partial(attn_apply, local=True),
+    "mla": mla_apply,
+    "rglru": rglru_apply,
+    "mlstm": mlstm_apply,
+    "slstm": slstm_apply,
+}
+
+
+def _bidir_attn_apply(p, x, *, cfg, kv=None):
+    """Bidirectional (encoder) or cross attention — no mask, no cache."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    xq = x.astype(cdt)
+    q = (xq @ p["wq"].astype(cdt)).reshape(B, S, H, dh)
+    if kv is None:
+        src = xq
+    else:
+        src = kv.astype(cdt)
+    T = src.shape[1]
+    k = (src @ p["wk"].astype(cdt)).reshape(B, T, Hkv, dh)
+    v = (src @ p["wv"].astype(cdt)).reshape(B, T, Hkv, dh)
+    pos_q = jnp.arange(S)
+    pos_k = jnp.arange(T)
+    o = blockwise_attention(q, k, v, pos_q, pos_k, causal=False)
+    y = o.reshape(B, S, H * dh) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype)
+
+
+def _xattn_cached(p, x, k_cache, v_cache, *, cfg):
+    """Cross-attention against precomputed encoder K/V (decode path)."""
+    B, S, D = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+    q = (x.astype(cdt) @ p["wq"].astype(cdt)).reshape(B, S, H, dh)
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    s = jnp.einsum("bskgd,btkd->bskgt", qg, k_cache.astype(cdt),
+                   preferred_element_type=jnp.float32) / math.sqrt(dh)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkd->bskgd", pr.astype(cdt), v_cache.astype(cdt))
+    y = o.reshape(B, S, H * dh) @ p["wo"].astype(cdt)
+    return y.astype(x.dtype)
+
+
+def apply_block(kind: str, p, x, *, cfg, mode, cache, pos, enc_out=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if kind == "attn_bidir":
+        y = _bidir_attn_apply(p["mixer"], h, cfg=cfg)
+        new_cache = None
+    else:
+        y, new_cache = MIXER_APPLY[kind](p["mixer"], h, cfg=cfg, mode=mode,
+                                         cache=cache, pos=pos)
+    x = x + y
+    if "ffn" in p:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.ffn == "moe":
+            y, aux = moe_apply(p["ffn"], h, cfg=cfg)
+        else:
+            y = swiglu_apply(p["ffn"], h, cfg=cfg)
+        x = x + y
+    return x, new_cache, aux
+
+
+def _group_step(cfg: ModelConfig, pattern, x, gp, gcache, *, mode, pos,
+                enc_out=None):
+    """Apply one pattern group (sequence of blocks)."""
+    new_caches = {}
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(pattern):
+        key = f"{i}:{kind}"
+        cache = None if gcache is None else gcache.get(key)
+        x, nc, aux = apply_block(kind, gp[key], x, cfg=cfg, mode=mode,
+                                 cache=cache, pos=pos)
+        aux_total = aux_total + aux
+        if cfg.encoder_layers and (enc_out is not None or mode == "decode"):
+            xk = f"{i}:xattn"
+            h = rms_norm(x, gp[xk]["norm"], cfg.norm_eps)
+            if mode == "decode":
+                y = _xattn_cached(gp[xk]["attn"], h, gcache[xk]["k"],
+                                  gcache[xk]["v"], cfg=cfg)
+                nc_x = {"k": gcache[xk]["k"], "v": gcache[xk]["v"]}
+            else:
+                y = _bidir_attn_apply(gp[xk]["attn"], h, cfg=cfg, kv=enc_out)
+                if mode == "prefill":
+                    cdt = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+                    e = enc_out.astype(cdt)
+                    B, T, _ = e.shape
+                    nc_x = {"k": (e @ gp[xk]["attn"]["wk"].astype(cdt)).reshape(
+                                B, T, cfg.n_kv_heads, cfg.head_dim),
+                            "v": (e @ gp[xk]["attn"]["wv"].astype(cdt)).reshape(
+                                B, T, cfg.n_kv_heads, cfg.head_dim)}
+                else:
+                    nc_x = None
+            x = x + y
+            if nc_x is not None:
+                new_caches[xk] = nc_x
+        if nc is not None:
+            new_caches[key] = nc
+    return x, (new_caches if new_caches else None), aux_total
+
+
+_REMAT_POLICIES = {
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    # §Perf: additionally save the all-gathered K/V (checkpoint_name 'kv') so
+    # the backward pass re-reads them from HBM instead of re-gathering over ICI
+    "dots+kv": lambda: jax.checkpoint_policies.save_from_both_policies(
+        jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        jax.checkpoint_policies.save_only_these_names("kv")),
+    "nothing": lambda: jax.checkpoint_policies.nothing_saveable,
+}
+_ACTIVE_REMAT_POLICY = ["dots"]
+
+
+def set_remat_policy(name: str):
+    assert name in _REMAT_POLICIES, name
+    _ACTIVE_REMAT_POLICY[0] = name
+
+
+def _scan_blocks(cfg, pattern, x, stacked_params, stacked_caches, *, mode, pos,
+                 enc_out=None, remat: bool = False):
+    collect = mode in ("prefill", "decode")
+
+    def body(x, inp):
+        gp, gcache = inp
+        x, ncache, aux = _group_step(cfg, pattern, x, gp, gcache, mode=mode,
+                                     pos=pos, enc_out=enc_out)
+        return x, (ncache if collect else None, aux)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=_REMAT_POLICIES[_ACTIVE_REMAT_POLICY[0]]())
+    x, (ncaches, auxes) = jax.lax.scan(body, x, (stacked_params, stacked_caches))
+    return x, ncaches, jnp.sum(auxes)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # -- params ------------------------------------------------------------
+    def param_defs(self):
+        return model_defs(self.cfg)
+
+    def init(self, key: jax.Array):
+        dt = jnp.bfloat16 if self.cfg.param_dtype == "bfloat16" else jnp.float32
+        return init_from_defs(self.param_defs(), key, dt)
+
+    def param_shapes(self):
+        dt = jnp.bfloat16 if self.cfg.param_dtype == "bfloat16" else jnp.float32
+        return shape_structs_from_defs(self.param_defs(), dt)
+
+    def param_axes(self):
+        return axes_from_defs(self.param_defs())
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.frontend == "none":
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+            x = x * math.sqrt(cfg.d_model)
+        else:
+            x = batch["embeds"]     # modality frontend stub: precomputed
+        x = logical(x.astype(jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
+                             else jnp.float32), "batch", "seq", "dmodel")
+        return x
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        x = batch["enc_embeds"].astype(
+            jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32)
+        x, _, _ = _scan_blocks(cfg, ("attn_bidir",), x,
+                               params["encoder_blocks"], None,
+                               mode="train", pos=None)
+        return rms_norm(x, params["encoder_norm"], cfg.norm_eps)
+
+    def _trunk(self, params, x, caches, *, mode, pos, enc_out, remat):
+        cfg = self.cfg
+        x, nc_main, aux = _scan_blocks(
+            cfg, cfg.pattern, x, params["blocks"],
+            None if caches is None else caches["blocks"],
+            mode=mode, pos=pos, enc_out=enc_out, remat=remat)
+        new_caches = {"blocks": nc_main} if nc_main is not None else None
+        if cfg.n_tail:
+            x, nc_tail, aux2 = _scan_blocks(
+                cfg, cfg.tail_pattern, x, params["tail_blocks"],
+                None if caches is None else caches["tail_blocks"],
+                mode=mode, pos=pos, enc_out=None, remat=remat)
+            aux = aux + aux2
+            if new_caches is not None:
+                new_caches["tail_blocks"] = nc_tail
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, new_caches, aux
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        cdt = x.dtype
+        logits = x @ params["lm_head"].astype(cdt)
+        return logical(logits, "batch", "seq", "vocab")
+
+    # -- entry points --------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: bool = True,
+                aux_weight: float = 0.01):
+        """Mean next-token cross entropy (labels provided, already shifted)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.encoder_layers else None
+        x = self._embed(params, batch)
+        x, _, aux = self._trunk(params, x, None, mode="train", pos=None,
+                                enc_out=enc_out, remat=remat)
+        logits = self._logits(params, x).astype(jnp.float32)
+        labels = batch["labels"]
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        nll = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return nll + aux_weight * aux
+
+    def prefill(self, params, batch, cache_len: Optional[int] = None):
+        """Run the prompt; returns (last-position logits, caches)."""
+        cfg = self.cfg
+        enc_out = self._encode(params, batch) if cfg.encoder_layers else None
+        x = self._embed(params, batch)
+        B, S = x.shape[0], x.shape[1]
+        x, caches, _ = self._trunk(params, x, None, mode="prefill", pos=None,
+                                   enc_out=enc_out, remat=False)
+        logits = self._logits(params, x[:, -1:, :])
+        # Prefill returns K/V for the prompt; serving pads to cache_len.
+        if cache_len is not None and cache_len > S:
+            def pad(leaf):
+                if leaf.ndim >= 3 and leaf.shape[1] == S:   # (B, S, ...) kv
+                    pad_width = [(0, 0)] * leaf.ndim
+                    pad_width[1] = (0, cache_len - S)
+                    return jnp.pad(leaf, pad_width)
+                return leaf
+            caches = jax.tree_util.tree_map(pad, caches)
+        return logits, caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """One token for the whole batch.  tokens: (B, 1) int32; pos: scalar."""
+        cfg = self.cfg
+        if cfg.frontend == "none":
+            x = jnp.take(params["embed"], tokens, axis=0) * math.sqrt(cfg.d_model)
+        else:
+            x = jnp.take(params["lm_head"].T, tokens, axis=0) * math.sqrt(cfg.d_model)
+        x = x.astype(jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
+                     else jnp.float32)
+        x, new_caches, _ = self._trunk(params, x, caches, mode="decode",
+                                       pos=pos, enc_out=None, remat=False)
+        logits = self._logits(params, x)
+        return logits, new_caches

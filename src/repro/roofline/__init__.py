@@ -1,0 +1,1 @@
+from .analyze import analyze_all, analyze_cell, HW

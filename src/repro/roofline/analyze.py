@@ -1,0 +1,147 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape) on the single-pod mesh, with TPU v5e constants:
+
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s)
+    memory     = HLO_bytes   / (chips × 819e9  B/s)
+    collective = coll_bytes  / (chips × 50e9   B/s per ICI link)
+
+cost_analysis() numbers from an SPMD executable are *per device*, so global
+quantities are per-device × chips (the two conventions cancel in the terms).
+MODEL_FLOPS is the 6·N·D (train) / 2·N·D (inference) convention with N =
+active params; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/causal-waste
+and redundant compute.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+HW = {
+    "peak_flops": 197e12,      # bf16 / chip
+    "hbm_bw": 819e9,           # B/s / chip
+    "ici_bw": 50e9,            # B/s / link
+}
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    status: str
+    flops_global: float = 0.0
+    bytes_global: float = 0.0
+    coll_bytes_global: float = 0.0
+    coll_breakdown: Optional[Dict[str, int]] = None
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0
+    bottleneck: str = ""
+    mfu_bound: float = 0.0      # model_flops / (chips·peak·t_dominant)
+    reason: str = ""
+    memory_bytes_per_device: int = 0
+    bytes_raw_global: float = 0.0   # incl. XLA:CPU layout artifacts
+
+    def row(self) -> str:
+        if self.status != "ok":
+            return (f"| {self.arch} | {self.shape} | {self.status}: "
+                    f"{self.reason[:60]} | | | | | | |")
+        return ("| {a} | {s} | {tc:.2e} | {tm:.2e} | {tl:.2e} | {b} | "
+                "{ur:.2f} | {mfu:.1%} | {mem:.1f} |").format(
+            a=self.arch, s=self.shape, tc=self.t_compute, tm=self.t_memory,
+            tl=self.t_collective, b=self.bottleneck, ur=self.useful_ratio,
+            mfu=self.mfu_bound, mem=self.memory_bytes_per_device / 2**30)
+
+
+def analyze_cell(rec: dict) -> CellRoofline:
+    cell = CellRoofline(rec["arch"], rec["shape"], rec["mesh"],
+                        rec.get("chips", 256), rec["status"],
+                        reason=rec.get("reason", rec.get("error", "")))
+    if rec["status"] != "ok":
+        return cell
+    chips = cell.chips
+    hs = rec.get("hlo_stats") or {}
+    if "flops" in hs:
+        # loop-aware HLO walk (preferred — cost_analysis counts scan bodies once)
+        flops_dev = float(hs["flops"])
+        bytes_dev = float(hs["bytes"])
+        coll_dev = float(sum(hs["collective_bytes"].values()))
+        cell.coll_breakdown = hs["collective_bytes"]
+        cell.bytes_raw_global = float(hs.get("bytes_raw", 0.0)) * chips
+    else:
+        ca = rec.get("cost_analysis", {})
+        flops_dev = float(ca.get("flops", 0.0))
+        bytes_dev = float(ca.get("bytes accessed", 0.0))
+        coll_dev = float(sum(rec.get("collective_bytes_per_device", {}).values()))
+    cell.flops_global = flops_dev * chips
+    cell.bytes_global = bytes_dev * chips
+    cell.coll_bytes_global = coll_dev * chips
+    cell.coll_breakdown = rec.get("collective_bytes_per_device")
+    cell.t_compute = cell.flops_global / (chips * HW["peak_flops"])
+    cell.t_memory = cell.bytes_global / (chips * HW["hbm_bw"])
+    cell.t_collective = cell.coll_bytes_global / (chips * HW["ici_bw"])
+    cell.model_flops = float(rec.get("model_flops", 0.0))
+    cell.useful_ratio = (cell.model_flops / cell.flops_global
+                         if cell.flops_global else 0.0)
+    terms = {"compute": cell.t_compute, "memory": cell.t_memory,
+             "collective": cell.t_collective}
+    cell.bottleneck = max(terms, key=terms.get)
+    t_dom = max(terms.values())
+    cell.mfu_bound = (cell.model_flops / (chips * HW["peak_flops"] * t_dom)
+                      if t_dom else 0.0)
+    ma = rec.get("memory_analysis", {})
+    cell.memory_bytes_per_device = int(
+        ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)
+        + ma.get("output_size_in_bytes", 0))
+    return cell
+
+
+def load_records(artifact_dir: str = ARTIFACT_DIR, mesh: str = "single"
+                 ) -> List[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(artifact_dir, f"*__{mesh}.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def analyze_all(artifact_dir: str = ARTIFACT_DIR, mesh: str = "single"
+                ) -> List[CellRoofline]:
+    return [analyze_cell(r) for r in load_records(artifact_dir, mesh)]
+
+
+def markdown_table(cells: List[CellRoofline]) -> str:
+    hdr = ("| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "bottleneck | useful FLOP ratio | MFU bound | HBM GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    cells = sorted(cells, key=lambda c: (c.arch, order.get(c.shape, 9)))
+    return "\n".join([hdr] + [c.row() for c in cells])
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    cells = analyze_all(args.dir, args.mesh)
+    print(markdown_table(cells))
+    for c in cells:
+        if c.status == "ok":
+            print(f"\n{c.arch} {c.shape}: dominant={c.bottleneck} "
+                  f"t={max(c.t_compute, c.t_memory, c.t_collective):.3e}s "
+                  f"coll={c.coll_breakdown}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Exact(er) FLOP / byte / collective accounting from post-SPMD HLO text.
+
+XLA:CPU's ``compiled.cost_analysis()`` counts each while-loop *body once*,
+which under-reports scanned-layer / microbatched graphs by orders of
+magnitude (layers × microbatches).  This walker fixes that:
+
+  1. split the HLO module into computations, build a per-computation symbol
+     table (%name → output shape) and a call graph
+     (while body/condition, fusion `calls=`, `to_apply=`, conditional
+     branches) with while trip counts taken from the
+     ``backend_config={"known_trip_count":{"n":...}}`` JAX emits for scans;
+  2. propagate execution multipliers from ENTRY;
+  3. FLOPs: 2 · |out| · Π(lhs contracting dims) per `dot` (dots dominate all
+     our graphs; elementwise FLOPs are ignored, consistent with MXU roofline);
+  4. bytes: Σ (operand + output buffer bytes) over executable instructions —
+     the XLA bytes-accessed convention at fusion granularity;
+  5. collectives: output-buffer bytes per op kind, × multiplier.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^=]*?\))|(?:[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+                    r"([a-z0-9-]+)\(")
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=(%[\w.-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "after-all", "while", "conditional", "call", "bitcast",
+               "partition-id", "replica-id", "rng-get-and-update-state"}
+# Fusion-boundary traffic model for the roofline memory term: only ops that
+# move data at TPU fusion granularity are charged; slicing ops are charged for
+# the *slice* moved, not the loop-carried buffer they index into (XLA aliases
+# those in place).  Everything else (top-level elementwise, layout/relayout
+# artifacts of the CPU backend) would be fused on TPU and is charged 0 in the
+# essential count (still present in bytes_raw).
+_FULL_COST_OPS = {"dot", "convolution", "fusion", "reduce", "reduce-window",
+                  "sort", "select-and-scatter", "all-gather", "all-reduce",
+                  "reduce-scatter", "all-to-all", "collective-permute",
+                  "all-gather-start", "all-reduce-start", "cholesky",
+                  "triangular-solve"}
+_LAYOUT_OPS = {"copy", "transpose", "convert", "broadcast", "reshape",
+               "bitcast-convert", "concatenate", "pad", "reverse"}
+
+
+_LAYOUT_FUSION_TOKENS = ("transpose", "copy", "convert", "bitcast", "reshape",
+                         "broadcast")
+
+
+def _op_bytes(op: str, type_str: str, operand_types: List[Optional[str]],
+              name: str = "") -> float:
+    out_b = _shape_bytes(type_str)
+    if op == "fusion":
+        stem = name.lstrip("%").split(".")[0]
+        if "dynamic-update-slice" in stem or "dynamic_update_slice" in stem:
+            # in-place DUS on TPU: traffic = the update(s), not the buffer(s).
+            # Exclude every operand at least as large as the output (aliased
+            # destination buffers and their dtype-emulation twins).
+            small = [b for b in (_shape_bytes(t) for t in operand_types if t)
+                     if b < out_b]
+            return 2.0 * sum(small)
+        parts = [p for p in stem.split("_") if p and p != "fusion"]
+        if parts and all(p in _LAYOUT_FUSION_TOKENS for p in parts):
+            return 0.0                           # pure layout fusion (CPU artifact)
+    if op in _FULL_COST_OPS:
+        return out_b + sum(_shape_bytes(t) for t in operand_types if t)
+    if op in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_b                       # read slice + write slice
+    if op == "dynamic-update-slice":
+        upd = operand_types[1] if len(operand_types) > 1 else None
+        return 2.0 * (_shape_bytes(upd) if upd else out_b)
+    if op == "scatter":
+        upd = operand_types[2] if len(operand_types) > 2 else None
+        idx = operand_types[1] if len(operand_types) > 1 else None
+        return 2.0 * (_shape_bytes(upd) if upd else 0.0) + \
+            (_shape_bytes(idx) if idx else 0.0)
+    return 0.0
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+def _operands(rest: str) -> List[str]:
+    """Operand names from the first top-level paren group after the op name."""
+    i = rest.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    out, cur = [], []
+    for ch in rest[i:]:
+        if ch == "(":
+            depth += 1
+            if depth == 1:
+                continue
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                out.append("".join(cur).strip())
+                break
+        elif ch == "," and depth == 1:
+            out.append("".join(cur).strip())
+            cur = []
+            continue
+        cur.append(ch)
+    return [o.split(" ")[-1] for o in out if o.strip().startswith("%")]
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.shapes: Dict[str, str] = {}        # %instr -> type string
+        self.flops = 0.0
+        self.bytes = 0.0                        # essential (roofline) bytes
+        self.bytes_raw = 0.0                    # incl. CPU layout artifacts
+        self.coll = defaultdict(float)          # kind -> bytes
+        self.coll_n = defaultdict(int)
+        self.calls: List[Tuple[str, float]] = []  # (callee, weight)
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_ASSIGN_RE = re.compile(r"^(?:ROOT\s+)?%[\w.-]+\s*=")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)
+        if cur is None:
+            stripped = line.strip()
+            m = _COMP_HDR_RE.match(stripped)
+            if m and not _ASSIGN_RE.match(stripped):
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        type_str, op = om.group(1), om.group(2)
+        cur.shapes[name] = type_str
+        # call edges
+        weight = 1.0
+        if op == "while":
+            tm = _TRIP_RE.search(rest)
+            weight = float(tm.group(1)) if tm else 1.0
+        for cm in _CALL_ATTR_RE.finditer(rest):
+            # while body runs `trip` times; condition trip+1 (≈ trip); others once
+            w = weight if (op == "while" and
+                           cm.group(0).startswith(("body=", "condition="))) else 1.0
+            cur.calls.append((cm.group(1), w))
+        bm = _BRANCHES_RE.search(rest)
+        if bm:
+            for b in bm.group(1).split(","):
+                b = b.strip()
+                if b.startswith("%"):
+                    cur.calls.append((b, 1.0))
+        # FLOPs: dots
+        if op == "dot":
+            out_dims = _first_shape_dims(type_str) or []
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            lc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
+            ops = _operands(rest)
+            k = 1
+            if lc and ops:
+                lhs_type = cur.shapes.get(ops[0])
+                lhs_dims = _first_shape_dims(lhs_type) if lhs_type else None
+                if lhs_dims:
+                    for idx in lc.group(1).split(","):
+                        if idx:
+                            k *= lhs_dims[int(idx)]
+            cur.flops += 2.0 * out_elems * k
+        # bytes
+        if op not in _SKIP_BYTES:
+            operand_types = [cur.shapes.get(o) for o in _operands(rest)]
+            raw = _shape_bytes(type_str) + sum(
+                _shape_bytes(t) for t in operand_types if t)
+            cur.bytes_raw += raw
+            cur.bytes += _op_bytes(op, type_str, operand_types, name)
+        # collectives
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            cur.coll[base] += _shape_bytes(type_str)
+            cur.coll_n[base] += 1
+    comps["__entry__"] = comps.get(entry) if entry else None  # type: ignore
+    return comps
+
+
+def hlo_stats(text: str) -> Dict:
+    comps = parse_hlo(text)
+    entry = comps.pop("__entry__")
+    if entry is None:
+        return {"error": "no ENTRY computation found"}
+    mult: Dict[str, float] = defaultdict(float)
+
+    def visit(comp: Computation, m: float, depth=0):
+        if depth > 50:
+            return
+        mult[comp.name] += m
+        for callee, w in comp.calls:
+            c = comps.get(callee)
+            if c is not None:
+                visit(c, m * w, depth + 1)
+
+    visit(entry, 1.0)
+    flops = sum(c.flops * mult[c.name] for c in comps.values())
+    nbytes = sum(c.bytes * mult[c.name] for c in comps.values())
+    nbytes_raw = sum(c.bytes_raw * mult[c.name] for c in comps.values())
+    coll: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    coll_n: Dict[str, float] = {k: 0 for k in _COLLECTIVES}
+    for c in comps.values():
+        for k, v in c.coll.items():
+            coll[k] += v * mult[c.name]
+        for k, v in c.coll_n.items():
+            coll_n[k] += v * mult[c.name]
+    return {"flops": flops, "bytes": nbytes, "bytes_raw": nbytes_raw,
+            "collective_bytes": coll, "collective_counts": coll_n,
+            "n_computations": len(comps)}

@@ -1,0 +1,3 @@
+from .optimizer import AdamWConfig, init_opt_state, apply_updates
+from .train_step import TrainState, make_train_step, make_eval_step
+from .dp import DPSGDConfig, DPSGDAccountant

@@ -1,0 +1,84 @@
+"""DP-SGD integration of the paper's privacy machinery (plane A ↔ plane B).
+
+Per-example clipped gradients + Gaussian noise form a *linear Gaussian
+mechanism* in the sense of Definition 2: sensitivity C, noise N(0, (Cσ)² I),
+so each step has pcost = 1/σ², and steps compose additively (end of §2.1).
+The accountant below is exactly `repro.core.accountant` — the same code that
+prices the marginal mechanisms prices the training run, and budgets can be
+shared between noisy-marginal releases and DP training.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.accountant import (PrivacyBudget, approx_dp_eps, gdp_mu,
+                                   zcdp_rho)
+
+
+@dataclass(frozen=True)
+class DPSGDConfig:
+    clip_norm: float = 1.0
+    noise_multiplier: float = 1.0      # σ: noise stddev = C·σ
+
+    @property
+    def pcost_per_step(self) -> float:
+        return 1.0 / (self.noise_multiplier ** 2)
+
+
+class DPSGDAccountant:
+    """Sequential-composition accounting for a DP-SGD run."""
+
+    def __init__(self, cfg: DPSGDConfig, budget: Optional[PrivacyBudget] = None):
+        self.cfg = cfg
+        self.budget = budget
+        self.steps = 0
+
+    def charge_step(self):
+        self.steps += 1
+        if self.budget is not None:
+            self.budget.charge(self.cfg.pcost_per_step)
+
+    @property
+    def pcost(self) -> float:
+        return self.steps * self.cfg.pcost_per_step
+
+    def report(self) -> dict:
+        pc = self.pcost
+        return {"steps": self.steps, "pcost": pc, "rho_zcdp": zcdp_rho(pc),
+                "mu_gdp": gdp_mu(pc),
+                "eps_at_delta_1e-6": approx_dp_eps(pc, 1e-6)}
+
+
+def per_example_clipped_grad(loss_fn, params, batch, clip_norm: float):
+    """Mean of per-example gradients, each clipped to L2 ≤ clip_norm (vmap'd)."""
+    def single(example):
+        ex = jax.tree_util.tree_map(lambda x: x[None], example)
+        return jax.grad(lambda p: loss_fn(p, ex))(params)
+
+    grads = jax.vmap(single)(batch)   # leaves: (B, *param_shape)
+
+    def norms(g):
+        return jnp.sqrt(sum(jnp.sum(jnp.square(x.reshape(x.shape[0], -1)
+                                               .astype(jnp.float32)), axis=1)
+                            for x in jax.tree_util.tree_leaves(g)))
+    n = norms(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(n, 1e-12))
+    clipped = jax.tree_util.tree_map(
+        lambda g: jnp.mean(g * scale.reshape((-1,) + (1,) * (g.ndim - 1)),
+                           axis=0), grads)
+    return clipped
+
+
+def add_dp_noise(grads, key, clip_norm: float, noise_multiplier: float,
+                 batch_size: int):
+    """Gaussian noise calibrated to the clipped-sum sensitivity (mean reduction)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    std = clip_norm * noise_multiplier / batch_size
+    noisy = [g + std * jax.random.normal(k, g.shape, jnp.float32).astype(g.dtype)
+             for g, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, noisy)

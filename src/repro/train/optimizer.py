@@ -1,0 +1,118 @@
+"""AdamW with optional int8 block-quantized moments (distributed-optimization
+trick: for kimi-k2 the fp32 m/v alone would be ~8 TB; int8 + per-block scales
+cuts optimizer state 4x and shards exactly like the params).
+
+Quantization layout preserves parameter shape — int8 tensor of the same shape
+plus an fp32 scale per 128-wide block of the last axis — so optimizer state
+inherits each parameter's NamedSharding unchanged.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    int8_states: bool = False
+    warmup_steps: int = 100
+
+
+def _block_view(x):
+    last = x.shape[-1]
+    if last % BLOCK == 0 and last >= BLOCK:
+        nb, b = last // BLOCK, BLOCK
+    else:
+        nb, b = 1, last
+    return x.reshape(x.shape[:-1] + (nb, b)), nb, b
+
+
+def quantize_i8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xb, nb, b = _block_view(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(xb), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(xb / jnp.maximum(scale, 1e-30)).astype(jnp.int8)
+    return q.reshape(x.shape), scale[..., 0]
+
+
+def dequantize_i8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    qb, nb, b = _block_view(q.astype(jnp.float32))
+    return (qb * scale[..., None]).reshape(q.shape)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    def zeros_like_moment(p):
+        if cfg.int8_states:
+            q = jnp.zeros(p.shape, jnp.int8)
+            _, nb, b = _block_view(p)
+            s = jnp.zeros(p.shape[:-1] + (nb,), jnp.float32)
+            return {"q": q, "s": s}
+        return jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros_like_moment, params),
+        "v": jax.tree_util.tree_map(zeros_like_moment, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _load(moment, cfg):
+    if cfg.int8_states:
+        return dequantize_i8(moment["q"], moment["s"])
+    return moment
+
+
+def _store(x, cfg):
+    if cfg.int8_states:
+        q, s = quantize_i8(x)
+        return {"q": q, "s": s}
+    return x
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    lr = cfg.lr * jnp.minimum(1.0, cf / max(cfg.warmup_steps, 1))
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v):
+        g = g.astype(jnp.float32) * clip
+        m = _load(m_, cfg)
+        v = _load(v_, cfg)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / (1 - cfg.b1 ** cf)
+        vh = v / (1 - cfg.b2 ** cf)
+        upd = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(_store(m, cfg))
+        new_v.append(_store(v, cfg))
+
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+             "v": jax.tree_util.tree_unflatten(treedef, new_v),
+             "count": count},
+            {"grad_norm": gnorm, "lr": lr})

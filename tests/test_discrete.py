@@ -1,0 +1,102 @@
+"""Discrete Gaussian (Section 5): sampler exactness, Alg 3 equivalence,
+privacy accounting (Thm 6), and the Example-2 naive blow-up."""
+import math
+import random
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import Domain, MarginalWorkload, select_sum_of_variances
+from repro.core.discrete import (discrete_zcdp_rho, measure_discrete,
+                                 naive_discrete_rho, rationalize_sigma,
+                                 sample_discrete_gaussian,
+                                 xi_l2_sensitivity2)
+from repro.core.kron import kron_expand, kron_matvec_np
+from repro.core.mechanism import exact_marginals_from_x
+from repro.core.residual import p_coeff, sub_gram, sub_matrix
+from repro.core.reconstruct import reconstruct_marginal
+
+
+def test_sampler_moments():
+    rng = random.Random(0)
+    for s2 in (Fraction(1), Fraction(4), Fraction(25, 4)):
+        xs = np.array([sample_discrete_gaussian(s2, rng) for _ in range(3000)],
+                      dtype=float)
+        assert abs(xs.mean()) < 4 * math.sqrt(float(s2) / 3000)
+        assert xs.var() <= float(s2) * 1.15          # var(N_Z) ≤ σ²
+        assert xs.var() >= float(s2) * 0.75
+
+
+def test_sampler_integer_support():
+    rng = random.Random(1)
+    xs = [sample_discrete_gaussian(Fraction(9, 4), rng) for _ in range(200)]
+    assert all(isinstance(x, int) for x in xs)
+
+
+def test_rationalize_rounds_up():
+    for s in (0.3333, 1.4142, 2.7182):
+        sb = rationalize_sigma(s, digits=4)
+        assert float(sb) >= s
+        assert float(sb) - s < 1e-4 + 1e-12
+
+
+def test_alg3_matrix_identities():
+    """Y†Ξ = R_A and the continuous version of Alg 3 has cov σ̄²Σ_A (Thm 6)."""
+    dom = Domain.create([4, 3])
+    clique = (0, 1)
+    H = kron_expand([4 * np.eye(4) - np.ones((4, 4)),
+                     3 * np.eye(3) - np.ones((3, 3))])
+    Ypinv = kron_expand([sub_matrix(4) / 4, sub_matrix(3) / 3])
+    R = kron_expand([sub_matrix(4), sub_matrix(3)])
+    # Y† H = R  (applied to the marginal table)
+    assert np.allclose(Ypinv @ H, R @ np.eye(12), atol=1e-9)
+    # covariance: Y† (γ² I) Y†ᵀ = σ̄² Σ_A  with γ² = σ̄²·(4·3)²
+    gamma2 = 12.0 ** 2
+    cov = gamma2 * Ypinv @ Ypinv.T
+    Sigma = kron_expand([sub_gram(4), sub_gram(3)])
+    assert np.allclose(cov, Sigma, atol=1e-8)
+
+
+def test_thm6_rho_equals_continuous():
+    dom = Domain.create([2, 2, 2])
+    for clique in [(0,), (0, 1), (0, 1, 2)]:
+        sb = Fraction(2, 3)
+        rho_disc = discrete_zcdp_rho(dom, clique, sb)
+        rho_cont = Fraction(1, 2) * Fraction(
+            int(round(p_coeff(dom, clique) * 2 ** len(clique))),
+            2 ** len(clique)) / sb ** 2
+        assert rho_disc == rho_cont
+
+
+def test_example2_blowup():
+    """Naive discrete swap loses exactly 2^k on k binary attributes."""
+    dom = Domain.create([2] * 3)
+    wk = MarginalWorkload(dom, ((0, 1, 2),))
+    plan = select_sum_of_variances(wk, 1.0)
+    # restrict attention to the top clique
+    k = 3
+    sigma2 = plan.sigmas[(0, 1, 2)]
+    rho_cont = p_coeff(dom, (0, 1, 2)) / (2 * sigma2)     # (1/2)·2^-k/σ²...
+    rho_naive = 1.0 / (2 * sigma2)
+    assert math.isclose(rho_naive / rho_cont, 2 ** k, rel_tol=1e-9)
+    assert naive_discrete_rho(plan) > sum(
+        p_coeff(dom, c) / (2 * plan.sigmas[c]) for c in plan.cliques)
+
+
+def test_measure_discrete_end_to_end(rng):
+    dom = Domain.create([3, 2])
+    wk = MarginalWorkload(dom, ((0, 1),))
+    plan = select_sum_of_variances(wk, 0.5)
+    x = rng.integers(0, 30, 6).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    # zero-noise override: must reproduce exact residual answers
+    zero = lambda g2, n, r: np.zeros(n, dtype=object)
+    meas = measure_discrete(plan, margs, random.Random(0), _noise_override=zero)
+    got = reconstruct_marginal(plan, meas, (0, 1))
+    assert np.allclose(got, margs[(0, 1)], atol=1e-8)
+    # real noise: unbiased-ish, integer-combination structure
+    meas = measure_discrete(plan, margs, random.Random(0))
+    got = reconstruct_marginal(plan, meas, (0, 1))
+    assert got.shape == (6,)
+    assert np.all(np.isfinite(got))

@@ -1,0 +1,94 @@
+"""Sharded measurement engine + corpus-stats integration + HDMM baseline."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Domain, MarginalWorkload, PrivacyBudget, all_kway,
+                        reconstruct_all, select_sum_of_variances)
+from repro.data.tabular import (adult_domain, marginals_from_records,
+                                synth_domain, synthetic_records)
+from repro.engine.sharded import sharded_marginals, sharded_measure
+from repro.engine.corpus_stats import corpus_marginal_release
+from repro.launch.mesh import make_host_mesh
+
+
+def test_sharded_marginals_match_numpy():
+    dom = synth_domain(4, 3)
+    wk = all_kway(dom, 2, include_lower=True)
+    recs = synthetic_records(dom, 500, seed=1)
+    want = marginals_from_records(dom, wk.closure(), recs)
+    got = sharded_marginals(dom, wk.closure(), jnp.asarray(recs))
+    for c in wk.closure():
+        assert np.allclose(np.asarray(got[c]), want[c]), c
+    mesh = make_host_mesh()
+    got_mesh = sharded_marginals(dom, wk.closure(), jnp.asarray(recs), mesh)
+    for c in wk.closure():
+        assert np.allclose(np.asarray(got_mesh[c]), want[c]), c
+
+
+def test_sharded_measure_end_to_end():
+    dom = synth_domain(3, 4)
+    wk = all_kway(dom, 2)
+    plan = select_sum_of_variances(wk, 10.0)
+    recs = synthetic_records(dom, 2000, seed=2)
+    meas = sharded_measure(plan, jnp.asarray(recs), jax.random.PRNGKey(0))
+    tables = reconstruct_all(plan, meas)
+    want = marginals_from_records(dom, wk.cliques, recs)
+    for c in wk.cliques:
+        sd = np.sqrt(plan.marginal_variance(c))
+        assert np.all(np.abs(tables[c] - want[c]) < 6 * sd + 1e-6)
+
+
+def test_corpus_stats_budget_sharing():
+    dom = Domain.create([8, 8], names=["source", "len_bucket"])
+    wk = MarginalWorkload(dom, ((0,), (1,), (0, 1)))
+    recs = synthetic_records(dom, 1000, seed=3)
+    budget = PrivacyBudget.from_zcdp(rho=1.0)   # pcost 2.0 total
+    tables, variances, report = corpus_marginal_release(
+        dom, wk, jnp.asarray(recs), budget, pcost=0.5, key=jax.random.PRNGKey(1))
+    assert set(tables) == set(wk.cliques)
+    assert report["pcost_spent"] == pytest.approx(0.5, rel=1e-6)
+    assert budget.remaining == pytest.approx(1.5, rel=1e-6)
+    # DP-SGD then charges the same budget
+    from repro.train.dp import DPSGDAccountant, DPSGDConfig
+    acc = DPSGDAccountant(DPSGDConfig(noise_multiplier=2.0), budget)
+    for _ in range(5):
+        acc.charge_step()
+    assert budget.remaining == pytest.approx(1.5 - 5 * 0.25, rel=1e-6)
+    with pytest.raises(ValueError):
+        for _ in range(2):
+            acc.charge_step()
+
+
+def test_hdmm_sanity_and_crossover_direction():
+    """RP is optimal for marginals (HDMM ≥ RP); HDMM wins on the k=d Kron
+    range workload (paper §9.4 crossover)."""
+    from repro.baselines.hdmm import HdmmKron, hdmm_marginals
+    from repro.core.plus import PlusSchema, build_w, select_plus
+    dom = Domain.create([10, 10])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select_sum_of_variances(
+        wk, 1.0, {c: float(dom.n_cells(c)) for c in wk.cliques})
+    union = hdmm_marginals(wk, iters=300)
+    assert union.rmse(1.0) >= plan.rmse() * 0.999
+    # k = d Kron ranges: HDMM(OPT_kron) should beat RP+ (Table 10 direction)
+    n, d = 8, 2
+    dom2 = Domain.create([n] * d)
+    wk2 = MarginalWorkload(dom2, (tuple(range(d)),))
+    schema = PlusSchema.create(dom2, ["range"] * d, strategy_mode="hier")
+    rp = select_plus(wk2, schema, 1.0, "sov")
+    kron = HdmmKron.optimize([build_w("range", n)] * d, iters=800)
+    import math
+    hd_rmse = math.sqrt(kron.tv_unit / kron.n_queries)
+    assert hd_rmse < rp.rmse() * 1.05
+
+
+def test_hdmm_reconstruction_oom_guard():
+    from repro.baselines.hdmm import hdmm_measure_reconstruct, hdmm_marginals
+    dom = synth_domain(10, 10)   # universe 10^10 > guard
+    wk = all_kway(dom, 1)
+    union = hdmm_marginals(wk, iters=10)
+    with pytest.raises(MemoryError):
+        hdmm_measure_reconstruct(union, dom, np.zeros(1), np.random.default_rng(0))

@@ -1,0 +1,136 @@
+"""Measurement + reconstruction: pcost (Thm 3), unbiasedness (Thm 4),
+variances, consistency — against dense brute-force linear algebra."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+from repro.core import (Domain, MarginalWorkload, exact_marginals_from_x,
+                        measure, measure_np, pcost_of_plan,
+                        reconstruct_marginal, select_sum_of_variances)
+from repro.core.kron import kron_expand
+from repro.core.reconstruct import marginal_covariance_dense
+from repro.core.residual import expand_marginal, expand_residual, sub_gram
+
+
+class _ZeroRng:
+    def standard_normal(self, n):
+        return np.zeros(n)
+
+
+def _plan(sizes, cliques, budget=1.0):
+    dom = Domain.create(sizes)
+    wk = MarginalWorkload(dom, tuple(cliques))
+    return select_sum_of_variances(wk, budget,
+                                   {c: float(dom.n_cells(c)) for c in cliques})
+
+
+def _dense_pcost_matrix(plan):
+    dom = plan.domain
+    total = np.zeros((dom.universe_size(), dom.universe_size()))
+    for c in plan.cliques:
+        R = expand_residual(dom, c)
+        cov = plan.sigmas[c] * (kron_expand(
+            [sub_gram(dom.attributes[i].size) for i in c]) if c else np.ones((1, 1)))
+        total += R.T @ np.linalg.inv(cov) @ R
+    return total
+
+
+def test_pcost_formula_vs_dense():
+    plan = _plan([2, 3, 4], [(0,), (0, 1), (1, 2)])
+    dense = _dense_pcost_matrix(plan)
+    assert np.allclose(np.diag(dense).max(), pcost_of_plan(plan), atol=1e-9)
+    # marginals ⇒ uniform per-record privacy cost (the symmetry of Appendix B)
+    assert np.allclose(np.diag(dense), np.diag(dense)[0], atol=1e-9)
+
+
+def test_reconstruction_exact_no_noise(rng):
+    plan = _plan([3, 2, 4, 2], [(0, 2), (1, 3), (2, 3)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    meas = measure_np(plan, margs, _ZeroRng())
+    for c in plan.workload.cliques:
+        got = reconstruct_marginal(plan, meas, c)
+        want = exact_marginals_from_x(plan.domain, [c], x)[c]
+        assert np.allclose(got, want, atol=1e-8)
+
+
+def test_reconstruction_consistency(rng):
+    """Reconstructed marginals agree on shared sub-marginals (paper §4.3)."""
+    plan = _plan([3, 3, 2], [(0, 1), (1, 2)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    meas = measure_np(plan, margs, rng)
+    q01 = reconstruct_marginal(plan, meas, (0, 1)).reshape(3, 3)
+    q12 = reconstruct_marginal(plan, meas, (1, 2)).reshape(3, 2)
+    assert np.allclose(q01.sum(axis=0), q12.sum(axis=1), atol=1e-8)
+
+
+def test_variance_formula_vs_dense_blue(rng):
+    """Thm 4 variances == covariance of the dense BLUE estimator."""
+    plan = _plan([2, 3, 2], [(0, 1), (1, 2), (0, 2)])
+    dom = plan.domain
+    pc = _dense_pcost_matrix(plan)
+    for c in plan.workload.cliques:
+        Q = expand_marginal(dom, c)
+        cov = Q @ np.linalg.pinv(pc) @ Q.T
+        assert np.allclose(np.diag(cov), plan.marginal_variance(c), atol=1e-8)
+        assert np.allclose(cov, marginal_covariance_dense(plan, c), atol=1e-8)
+
+
+def test_measurement_covariance_empirical(rng):
+    """ω_A has covariance σ²_A · Sub Subᵀ (empirically, 3σ band)."""
+    dom = Domain.create([4])
+    wk = MarginalWorkload(dom, ((0,),))
+    plan = select_sum_of_variances(wk, 1.0, {(0,): 4.0})
+    margs = {(): np.array([0.0]), (0,): np.zeros(4)}
+    n = 4000
+    samples = np.array([measure_np(plan, margs, rng)[(0,)].omega
+                        for _ in range(n)])
+    emp = samples.T @ samples / n
+    want = plan.sigmas[(0,)] * sub_gram(4)
+    assert np.allclose(emp, want, atol=4 * want.max() / np.sqrt(n) * 3)
+
+
+def test_jax_measure_matches_shapes():
+    plan = _plan([3, 4], [(0, 1)])
+    x = np.arange(12, dtype=float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    meas = measure(plan, margs, jax.random.PRNGKey(0))
+    for c in plan.cliques:
+        assert meas[c].omega.shape[0] == plan.domain.residual_size(c)
+
+
+def test_unbiasedness_monte_carlo(rng):
+    plan = _plan([2, 3], [(0, 1)], budget=50.0)
+    x = rng.integers(0, 20, 6).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    want = exact_marginals_from_x(plan.domain, [(0, 1)], x)[(0, 1)]
+    acc = np.zeros(6)
+    n = 3000
+    for _ in range(n):
+        meas = measure_np(plan, margs, rng)
+        acc += reconstruct_marginal(plan, meas, (0, 1))
+    got = acc / n
+    sd = np.sqrt(plan.marginal_variance((0, 1)) / n)
+    assert np.all(np.abs(got - want) < 5 * sd + 1e-9)
+
+
+def test_batched_measurement_matches_loop(rng):
+    """§Perf M2: chunked-batched measurement is a drop-in for the loop."""
+    from repro.core.mechanism import measure_np_batched
+    plan = _plan([5, 3, 4, 2], [(0, 1), (1, 2), (2, 3), (0, 3)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    za = measure_np(plan, margs, _ZeroRng())
+    zb = measure_np_batched(plan, margs, _ZeroRng(), chunk=3)
+    for c in plan.cliques:
+        assert np.allclose(za[c].omega, zb[c].omega, atol=1e-10)
+    # with noise: same marginal statistics (variance within 4 sigma)
+    meas = measure_np_batched(plan, margs, rng)
+    for c in plan.workload.cliques:
+        q = reconstruct_marginal(plan, meas, c)
+        want = exact_marginals_from_x(plan.domain, [c], x)[c]
+        sd = np.sqrt(plan.marginal_variance(c))
+        assert np.all(np.abs(q - want) < 6 * sd + 1e-9)

@@ -1,0 +1,146 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+shape + finiteness asserts, decode/prefill consistency, mLSTM oracle check."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, load_all
+from repro.configs.shapes import SHAPES, cell_is_applicable, input_specs, reduced_config
+from repro.models import Model
+
+load_all()
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {}
+    if cfg.frontend == "embed_stub":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model), jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_step(arch):
+    cfg = reduced_config(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: model.loss_fn(p, batch, remat=False)))(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float32)))
+    # one optimizer step moves the loss
+    from repro.train import AdamWConfig, apply_updates, init_opt_state
+    oc = AdamWConfig(lr=1e-2, warmup_steps=1)
+    new_p, _, _ = apply_updates(params, grads, init_opt_state(params, oc), oc)
+    loss2 = float(model.loss_fn(new_p, batch, remat=False))
+    assert np.isfinite(loss2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_consistency(arch):
+    """Greedy decode logits from the cache match teacher-forced forward."""
+    cfg = reduced_config(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    pf = {k: v for k, v in batch.items() if k != "labels"}
+    logits_last, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len=S + 4))(params, pf)
+    assert logits_last.shape == (B, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits_last[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    logits_d, caches2 = jax.jit(model.decode_step)(params, tok, caches,
+                                                   jnp.asarray(S))
+    assert logits_d.shape == (B, 1, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+    leaves1 = jax.tree_util.tree_leaves(caches)
+    leaves2 = jax.tree_util.tree_leaves(caches2)
+    assert len(leaves1) == len(leaves2)
+    for a, b in zip(leaves1, leaves2):
+        assert a.shape == b.shape
+
+
+def test_mlstm_chunkwise_matches_recurrent_oracle():
+    from repro.models.recurrent import mlstm_apply, mlstm_recurrent_oracle, mlstm_defs
+    from repro.models.layers import init_from_defs
+    cfg = reduced_config("xlstm-350m")
+    key = jax.random.PRNGKey(3)
+    p = init_from_defs(mlstm_defs(cfg), key, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg.d_model), jnp.float32) * 0.5
+    got, _ = mlstm_apply(p, x, cfg=cfg, mode="train", chunk=8)
+    want = mlstm_recurrent_oracle(p, x, cfg=cfg)
+    err = np.max(np.abs(np.asarray(got, np.float32) - np.asarray(want)))
+    assert err < 2e-2 * (np.max(np.abs(np.asarray(want))) + 1e-6)
+
+
+def test_rglru_decode_matches_prefill_tail():
+    from repro.models.recurrent import rglru_apply, rglru_defs
+    from repro.models.layers import init_from_defs
+    cfg = reduced_config("recurrentgemma-2b")
+    key = jax.random.PRNGKey(4)
+    p = init_from_defs(rglru_defs(cfg), key, jnp.float32)
+    x = jax.random.normal(key, (2, 9, cfg.d_model), jnp.float32)
+    full, cache_full = rglru_apply(p, x, cfg=cfg, mode="prefill")
+    part, cache = rglru_apply(p, x[:, :8], cfg=cfg, mode="prefill")
+    step, _ = rglru_apply(p, x[:, 8:9], cfg=cfg, mode="decode", cache=cache)
+    assert np.allclose(np.asarray(step), np.asarray(full[:, 8:9]), atol=1e-4)
+
+
+def test_local_attention_matches_masked_full():
+    from repro.models.layers import blockwise_attention, local_attention
+    key = jax.random.PRNGKey(5)
+    B, S, H, dh, W = 2, 32, 4, 8, 8
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, dh))
+    pos = jnp.arange(S)
+    a = local_attention(q, k, v, pos, pos, window=W)
+    b = blockwise_attention(q, k, v, pos, pos, causal=True, window=W,
+                            kv_block=16)
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_blockwise_attention_matches_naive():
+    key = jax.random.PRNGKey(6)
+    from repro.models.layers import blockwise_attention
+    B, S, H, dh = 2, 24, 4, 8
+    q = jax.random.normal(key, (B, S, H, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, 2, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, dh))
+    pos = jnp.arange(S)
+    got = blockwise_attention(q, k, v, pos, pos, causal=True, kv_block=8)
+    # naive
+    G = H // 2
+    qg = np.asarray(q).reshape(B, S, 2, G, dh)
+    s = np.einsum("bskgd,btkd->bskgt", qg, np.asarray(k)) / np.sqrt(dh)
+    mask = pos[None, :] <= pos[:, None]
+    s = np.where(mask[None, :, None, None, :], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    want = np.einsum("bskgt,btkd->bskgd", p, np.asarray(v)).reshape(B, S, H, dh)
+    assert np.allclose(np.asarray(got), want, atol=1e-4)
+
+
+def test_input_specs_cover_all_cells():
+    n_cells = 0
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            ok, why = cell_is_applicable(arch, shape)
+            n_cells += 1
+            if ok:
+                specs = input_specs(arch, shape)
+                assert specs, (arch, shape)
+                for s in specs.values():
+                    assert isinstance(s, jax.ShapeDtypeStruct)
+    assert n_cells == 40

@@ -1,0 +1,125 @@
+"""ResidualPlanner+ (Algs 4/5/6, Thms 7/8) against dense brute force."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Domain, MarginalWorkload, select_sum_of_variances
+from repro.core.kron import kron_expand, kron_matvec_np
+from repro.core.mechanism import exact_marginals_from_x
+from repro.core.plus import (PlusSchema, attr_basis, build_w,
+                             cell_variances_plus, measure_plus_np,
+                             p_coeff_plus, reconstruct_plus, s_hierarchical,
+                             select_plus, sov_coeff_plus, w_prefix, w_range)
+
+
+class _ZeroRng:
+    def standard_normal(self, n):
+        return np.zeros(n)
+
+
+def _brute(plan, schema, dom, clique):
+    Bs, covs = [], []
+    for c in plan.cliques:
+        facs = [schema.bases[i].Sub if i in set(c) else
+                np.ones((1, dom.attributes[i].size)) for i in range(dom.n_attrs)]
+        R = kron_expand(facs)
+        G = kron_expand([schema.bases[i].Gamma for i in c]) if c else np.ones((1, 1))
+        Bs.append(R)
+        covs.append(plan.sigmas[c] * G @ G.T)
+    B = np.vstack(Bs)
+    Sig = np.zeros((B.shape[0],) * 2)
+    o = 0
+    for cv in covs:
+        k = cv.shape[0]
+        Sig[o:o + k, o:o + k] = cv
+        o += k
+    pc = B.T @ np.linalg.inv(Sig) @ B
+    facs = [schema.bases[i].W if i in set(clique) else
+            np.ones((1, dom.attributes[i].size)) for i in range(dom.n_attrs)]
+    Q = kron_expand(facs)
+    return Q @ np.linalg.pinv(pc) @ Q.T, pc
+
+
+@pytest.mark.parametrize("kinds,mode", [
+    (["prefix", "identity", "prefix"], "w"),
+    (["range", "identity", "range"], "w"),
+    (["prefix", "prefix", "identity"], "hier"),
+])
+def test_thm7_thm8_vs_dense(kinds, mode):
+    dom = Domain.create([3, 4, 2])
+    wk = MarginalWorkload(dom, ((0,), (0, 1), (1, 2)))
+    schema = PlusSchema.create(dom, kinds, strategy_mode=mode)
+    plan = select_plus(wk, schema, 1.0, "sov")
+    for c in wk.cliques:
+        cov, pc = _brute(plan, schema, dom, c)
+        assert math.isclose(plan.sov(c), np.trace(cov), rel_tol=1e-7)
+        cells = cell_variances_plus(schema, plan.sigmas, c)
+        assert np.allclose(cells, np.diag(cov), atol=1e-8)
+    pcost = sum(p_coeff_plus(schema, c) / plan.sigmas[c] for c in plan.cliques)
+    _, pc = _brute(plan, schema, dom, wk.cliques[0])
+    assert math.isclose(pcost, np.diag(pc).max(), rel_tol=1e-7)
+
+
+def test_alg4_properties():
+    """Sub·1 = 0; rowspace(Sub) = rowspace(P1); identity branch = Section 4.2."""
+    for n in (2, 3, 7, 16):
+        for kind in ("prefix", "range"):
+            b = attr_basis(build_w(kind, n))
+            assert np.allclose(b.Sub @ np.ones(n), 0.0, atol=1e-8)
+            P1 = b.S - (b.S @ np.ones((n, 1))) @ np.ones((1, n)) / n
+            assert np.linalg.matrix_rank(np.vstack([b.Sub, P1]),
+                                         tol=1e-8) == b.Sub.shape[0]
+    bi = attr_basis(np.eye(5))
+    assert bi.identity and math.isclose(bi.beta, 4 / 5, rel_tol=1e-12)
+
+
+def test_rplus_reconstruction_exact(rng):
+    dom = Domain.create([4, 3, 5])
+    wk = MarginalWorkload(dom, ((0,), (0, 2), (1, 2)))
+    schema = PlusSchema.create(dom, ["prefix", "identity", "range"],
+                               strategy_mode="hier")
+    plan = select_plus(wk, schema, 1.0, "sov")
+    x = rng.integers(0, 7, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    meas = measure_plus_np(plan, margs, _ZeroRng())
+    for c in wk.cliques:
+        got = reconstruct_plus(plan, meas, c)
+        wfacs = [schema.bases[i].W for i in c]
+        want = kron_matvec_np(wfacs, margs[c],
+                              [dom.attributes[i].size for i in c])
+        assert np.allclose(got, want, atol=1e-7)
+
+
+def test_identity_rplus_equals_rp():
+    dom = Domain.create([3, 4, 2])
+    wk = MarginalWorkload(dom, ((0,), (0, 1), (1, 2)))
+    schema = PlusSchema.create(dom, ["identity"] * 3)
+    p_plus = select_plus(wk, schema, 1.0, "sov")
+    p_rp = select_sum_of_variances(
+        wk, 1.0, {c: float(dom.n_cells(c)) for c in wk.cliques})
+    for c in p_rp.cliques:
+        assert math.isclose(p_plus.sigmas[c], p_rp.sigmas[c], rel_tol=1e-9)
+
+
+def test_hier_strategy_beats_w_for_prefix():
+    """A good strategy replacement lowers RMSE at fixed budget (the point of §7)."""
+    dom = Domain.create([64, 3])
+    wk = MarginalWorkload(dom, ((0,), (0, 1)))
+    rmse_w = select_plus(wk, PlusSchema.create(dom, ["prefix", "identity"],
+                                               strategy_mode="w"), 1.0).rmse()
+    rmse_h = select_plus(wk, PlusSchema.create(dom, ["prefix", "identity"],
+                                               strategy_mode="hier"), 1.0).rmse()
+    assert rmse_h < rmse_w
+
+
+def test_maxvar_plus_solver():
+    dom = Domain.create([8, 3])
+    wk = MarginalWorkload(dom, ((0,), (1,), (0, 1)))
+    schema = PlusSchema.create(dom, ["prefix", "identity"], strategy_mode="w")
+    mv = select_plus(wk, schema, 1.0, "max_variance", steps=1500)
+    sov = select_plus(wk, schema, 1.0, "sov")
+    assert mv.max_cell_variance() <= sov.max_cell_variance() * 1.02
+    pcost = sum(p_coeff_plus(schema, c) / mv.sigmas[c] for c in mv.cliques)
+    assert math.isclose(pcost, 1.0, rel_tol=1e-6)

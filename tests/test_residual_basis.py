@@ -1,0 +1,62 @@
+"""Theorem 1 & Lemma 1: residual bases are orthogonal, complete, closed-form."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Domain, all_kway, closure, subsets
+from repro.core.residual import (expand_marginal, expand_residual, sub_matrix,
+                                 sub_pinv, sub_gram)
+
+doms = st.lists(st.integers(2, 5), min_size=1, max_size=4)
+
+
+@given(st.integers(2, 40))
+def test_sub_pinv_closed_form(m):
+    s = sub_matrix(m)
+    sp = sub_pinv(m)
+    assert np.allclose(sp, np.linalg.pinv(s), atol=1e-10)
+    assert np.allclose(s @ sp, np.eye(m - 1), atol=1e-10)     # right inverse
+
+
+@given(st.integers(2, 30))
+def test_sub_gram(m):
+    s = sub_matrix(m)
+    assert np.allclose(s @ s.T, sub_gram(m))
+
+
+@settings(deadline=None, max_examples=25)
+@given(doms)
+def test_residual_orthogonality(sizes):
+    dom = Domain.create(sizes)
+    cliques = closure([tuple(range(dom.n_attrs))])
+    mats = {c: expand_residual(dom, c) for c in cliques}
+    for a in cliques:
+        for b in cliques:
+            if a != b:
+                assert np.allclose(mats[a] @ mats[b].T, 0.0, atol=1e-8), (a, b)
+
+
+@settings(deadline=None, max_examples=25)
+@given(doms)
+def test_residual_spans_marginal(sizes):
+    """Rows of {R_A' : A' ⊆ A} form a basis of rowspace(Q_A) with matching count."""
+    dom = Domain.create(sizes)
+    A = tuple(range(dom.n_attrs))
+    Q = expand_marginal(dom, A)
+    R = np.vstack([expand_residual(dom, c) for c in subsets(A)])
+    assert R.shape[0] == Q.shape[0]
+    assert np.linalg.matrix_rank(R) == R.shape[0]             # independent
+    # every row of Q is a combination of rows of R
+    proj = R.T @ np.linalg.solve(R @ R.T, R @ Q.T)
+    assert np.allclose(proj.T, Q, atol=1e-8)
+
+
+def test_residual_size_counts():
+    dom = Domain.create([3, 4, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    total = sum(dom.residual_size(c) for c in closure(wk.cliques))
+    # Thm 2: number of noisy scalars equals total basis size; for the full
+    # closure of all attrs it equals the universe size.
+    full = sum(dom.residual_size(c) for c in closure([(0, 1, 2)]))
+    assert full == dom.universe_size()
+    assert total <= full
