@@ -1,15 +1,22 @@
-"""Shared benchmark utilities.  Output format: ``name,us_per_call,derived``."""
+"""Shared benchmark utilities.  Output format: ``name,us_per_call,derived``.
+
+``emit`` also records a structured row (plus any keyword metrics) so
+``run.py --json`` can dump machine-readable results (BENCH_kernels.json).
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable, Optional
 
 ROWS = []
+JSON_ROWS = []
 
 
-def emit(name: str, us_per_call: float, derived: str = ""):
+def emit(name: str, us_per_call: float, derived: str = "", **metrics):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
+    JSON_ROWS.append(dict(name=name, us_per_call=round(float(us_per_call), 1),
+                          derived=derived, **metrics))
     print(row, flush=True)
 
 

@@ -1,6 +1,15 @@
-"""Mechanism hot-path micro-bench: Kronecker matvec (ref jnp path timed on
-CPU; the Pallas kernel is TPU-target, validated in interpret mode — its CPU
-interpret timing is not meaningful and is reported only as a checksum)."""
+"""Mechanism hot-path bench: per-clique loop vs signature-batched vs fused.
+
+Two layers (docs/DESIGN.md §3–5):
+
+* micro: the Kronecker matvec itself (ref jnp path timed on CPU; Pallas
+  kernels are TPU-target and validated in interpret mode — their CPU
+  interpret timing measures launch/layout overhead, not MXU throughput);
+* macro: the full measurement + reconstruction phases on the paper's
+  Synth-10^d all-≤3-way workload (d=20), comparing the historical per-clique
+  loop against the signature-batched engine paths.  These rows carry the
+  ``speedup_*`` metrics recorded in BENCH_kernels.json.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,13 +17,19 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import (all_kway, measure, reconstruct_all,
+                        reconstruct_all_batched, select_sum_of_variances)
+from repro.core.mechanism import signature_groups
 from repro.core.residual import sub_matrix
+from repro.data.tabular import synth_domain
+from repro.kernels.kron_matvec.fused import fused_chain_matvec
 from repro.kernels.kron_matvec.ops import kron_matvec_kernel
 from repro.kernels.kron_matvec.ref import kron_matvec_ref
+from repro.kernels.kron_matvec.stats import chain_stats, reset_chain_stats
 from .common import emit, timeit
 
 
-def run(fast: bool = True):
+def _micro(fast: bool):
     for dims in ([50, 50, 40], [100, 100], [10] * 6):
         facs = [sub_matrix(n) for n in dims]
         x = jnp.asarray(np.random.default_rng(0).standard_normal(
@@ -30,3 +45,103 @@ def run(fast: bool = True):
             want = np.asarray(ref(x))
             emit(f"kernel/kron_pallas_interpret_check/dims={'x'.join(map(str, dims))}",
                  0.0, f"max_err={np.max(np.abs(got - want)):.2e}")
+            got_f = np.asarray(fused_chain_matvec(facs, np.asarray(x), dims))
+            emit(f"kernel/kron_fused_interpret_check/dims={'x'.join(map(str, dims))}",
+                 0.0, f"max_err={np.max(np.abs(got_f - want)):.2e}")
+
+
+def _measurement_workload(d: int):
+    """Synth-10^d, all ≤3-way marginals (the paper's scaling workload)."""
+    dom = synth_domain(10, d)
+    wk = all_kway(dom, 3, include_lower=True)
+    plan = select_sum_of_variances(wk, 1.0)
+    rng = np.random.default_rng(0)
+    margs = {c: rng.random(plan.domain.n_cells(c)) for c in plan.cliques}
+    return plan, margs
+
+
+def _macro_measure(fast: bool):
+    d = 20
+    plan, margs = _measurement_workload(d)
+    key = jax.random.PRNGKey(0)
+    n_cliques = len(plan.cliques)
+    n_sigs = len(signature_groups(plan.domain, plan.cliques))
+    tag = f"synth10^{d}_le3way"
+
+    def loop_jnp():
+        measure(plan, margs, key, use_kernel=False, batched=False)
+
+    def batched_jnp():
+        measure(plan, margs, key, use_kernel=False, batched=True)
+
+    def loop_kernel():
+        measure(plan, margs, key, use_kernel=True, batched=False)
+
+    def batched_fused():
+        measure(plan, margs, key, use_kernel=True, batched=True)
+
+    t_loop = timeit(loop_jnp, repeats=2, warmup=1)
+    t_bat = timeit(batched_jnp, repeats=2, warmup=1)
+    emit(f"measure/per_clique_jnp/{tag}", t_loop,
+         f"{n_cliques} cliques, 1 chain each", cliques=n_cliques)
+    emit(f"measure/batched_jnp/{tag}", t_bat,
+         f"{n_sigs} signature groups", signatures=n_sigs,
+         speedup_vs_per_clique=round(t_loop / t_bat, 2))
+
+    # CPU interpret mode: the Pallas chains run their kernel bodies in
+    # Python, so absolute numbers measure launch/pad/slice overhead — which
+    # is exactly what batching and fusion remove.  The per-clique interpret
+    # baseline is ~1 min/call; the fast profile skips it and scores the fused
+    # path against the per-clique jnp loop instead.
+    t_loopk = None
+    if not fast:
+        t_loopk = timeit(loop_kernel, repeats=1, warmup=1)
+        emit(f"measure/per_clique_pallas_interpret/{tag}", t_loopk,
+             f"{n_cliques} cliques, pad+slice per factor", cliques=n_cliques)
+    batched_fused()                     # warm the jit/pallas caches
+    reset_chain_stats()
+    t_fused = timeit(batched_fused, repeats=1)
+    st = chain_stats()
+    emit(f"measure/batched_fused_interpret/{tag}", t_fused,
+         f"{st['pallas_calls']} pallas_calls, {st['pads']} pads, "
+         f"{st['slices']} slices",
+         pallas_calls=st["pallas_calls"], pads=st["pads"], slices=st["slices"],
+         speedup_vs_per_clique=round((t_loopk or t_loop) / t_fused, 2))
+
+    # reconstruction: 2^|A| subset matvecs per marginal vs batched merged chains
+    meas = measure(plan, margs, key)
+    t_rec = timeit(lambda: reconstruct_all(plan, meas), repeats=2, warmup=1)
+    t_recb = timeit(lambda: reconstruct_all_batched(plan, meas, use_kernel=False),
+                    repeats=2, warmup=1)
+    reconstruct_all_batched(plan, meas, use_kernel=True)   # warm caches
+    reset_chain_stats()
+    t_reck = timeit(lambda: reconstruct_all_batched(plan, meas, use_kernel=True),
+                    repeats=1)
+    st = chain_stats()
+    n_marg = len(plan.workload.cliques)
+    emit(f"reconstruct/subset_loop_np/{tag}", t_rec,
+         f"{n_marg} marginals, 2^|A| matvecs each", marginals=n_marg)
+    emit(f"reconstruct/batched_jnp/{tag}", t_recb, "merged subset embedding",
+         speedup_vs_subset_loop=round(t_rec / t_recb, 2))
+    emit(f"reconstruct/batched_fused_interpret/{tag}", t_reck,
+         f"{st['pallas_calls']} pallas_calls for {n_marg} marginals",
+         pallas_calls=st["pallas_calls"],
+         speedup_vs_subset_loop=round(t_rec / t_reck, 2))
+
+
+def _engine_serving(fast: bool):
+    from repro.engine import MarginalEngine
+    d = 8 if fast else 20
+    plan, margs = _measurement_workload(d)
+    eng = MarginalEngine(plan, use_kernel=True)   # compiles every chain up front
+    key = jax.random.PRNGKey(1)
+    t = timeit(lambda: eng.release(margs, key), repeats=2, warmup=1)
+    emit(f"engine/release/synth10^{d}_le3way", t,
+         f"{len(eng.chain_plans())} precompiled chains",
+         chains=len(eng.chain_plans()))
+
+
+def run(fast: bool = True):
+    _micro(fast)
+    _macro_measure(fast)
+    _engine_serving(fast)

@@ -2,10 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` runs the complete
 paper grids (d up to 100 etc.); the default profile keeps CI runtime modest.
+``--json [PATH]`` additionally writes every recorded row (with structured
+metrics such as speedups) to PATH — default ``BENCH_kernels.json``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -15,6 +18,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full paper grids (slow: d up to 100)")
     ap.add_argument("--only", default=None, help="substring filter on module")
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="write structured results (default BENCH_kernels.json)")
     args, _ = ap.parse_known_args()
 
     from . import (table2_3_marginals_scaling, table4_5_accuracy,
@@ -34,6 +40,12 @@ def main() -> None:
             failed += 1
             print(f"{mod.__name__},nan,EXCEPTION", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        from .common import JSON_ROWS
+        with open(args.json, "w") as fh:
+            json.dump({"profile": "full" if args.full else "fast",
+                       "rows": JSON_ROWS}, fh, indent=2)
+        print(f"wrote {len(JSON_ROWS)} rows to {args.json}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -46,7 +46,7 @@ def cell_is_applicable(arch: str, shape: str) -> Tuple[bool, str]:
     cfg = get_config(arch)
     if shape == "long_500k" and not cfg.sub_quadratic:
         return False, ("full-attention arch: 512k dense KV decode is "
-                       "architecturally quadratic (skip per DESIGN.md)")
+                       "architecturally quadratic (skip per docs/DESIGN.md)")
     return True, ""
 
 

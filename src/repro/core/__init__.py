@@ -7,9 +7,11 @@ from .residual import (expand_marginal, expand_residual, marginal_factors,
 from .select import (Plan, select, select_convex, select_max_variance,
                      select_sum_of_variances, select_utility_constrained)
 from .mechanism import (Measurement, exact_marginals_from_x, measure,
-                        measure_np, pcost_of_plan, residual_answer)
+                        measure_np, measure_np_batched, pcost_of_plan,
+                        residual_answer, signature_groups)
 from .reconstruct import (marginal_covariance_dense, marginal_variance,
-                          reconstruct_all, reconstruct_marginal)
+                          reconstruct_all, reconstruct_all_batched,
+                          reconstruct_marginal, reconstruct_marginal_fast)
 from .accountant import (PrivacyBudget, approx_dp_delta, approx_dp_eps,
                          gdp_mu, pcost_for_eps_delta, pcost_for_mu,
                          pcost_for_rho, zcdp_rho)

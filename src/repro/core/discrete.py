@@ -16,7 +16,7 @@ inherits the continuous ρ-zCDP guarantee exactly.
 
 The sampler is the exact rejection sampler of Canonne–Kamath–Steinke (2020),
 implemented over ``fractions.Fraction`` — no floating point touches the noise
-path (host-side by design; see DESIGN.md §3).
+path (host-side by design; see docs/DESIGN.md §3).
 """
 from __future__ import annotations
 

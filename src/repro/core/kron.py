@@ -50,6 +50,28 @@ def kron_matvec(factors: Sequence[Factor], x, dims: Sequence[int]):
     return x.reshape(-1)
 
 
+def kron_matvec_batched(factors: Sequence[Factor], x, dims: Sequence[int]):
+    """Apply ``⊗_i factors[i]`` to every row of a stack ``x`` (B, Π dims) with jnp.
+
+    The batch axis is the same "left" dimension the Pallas kernels tile; this
+    is the device-side analogue of the signature-batched numpy path
+    (docs/DESIGN.md §4).  Returns shape (B, Π out_dims).
+    """
+    x = jnp.asarray(x)
+    b = x.shape[0]
+    x = x.reshape((b,) + tuple(dims))
+    for axis, f in enumerate(factors):
+        if f is None:
+            continue
+        if isinstance(f, str):
+            if f == "ones":
+                x = jnp.sum(x, axis=axis + 1, keepdims=True)
+                continue
+            raise ValueError(f)
+        x = _apply_axis_jnp(x, jnp.asarray(f), axis + 1)
+    return x.reshape(b, -1)
+
+
 def kron_matvec_np(factors: Sequence[Factor], x: np.ndarray,
                    dims: Sequence[int]) -> np.ndarray:
     x = np.asarray(x, dtype=np.float64).reshape(tuple(dims))

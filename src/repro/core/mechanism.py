@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from .domain import Clique, Domain
-from .kron import kron_matvec, kron_matvec_np
+from .kron import kron_matvec, kron_matvec_batched, kron_matvec_np
 from .residual import p_coeff, sub_matrix
 from .select import Plan
 
@@ -58,25 +58,92 @@ def residual_answer(domain: Domain, clique: Clique, marginal: jnp.ndarray,
     return kron_matvec(factors, jnp.asarray(marginal), dims)
 
 
+def signature_groups(domain: Domain, cliques: Sequence[Clique]
+                     ) -> Dict[tuple, List[Clique]]:
+    """Group cliques by attribute-size signature (docs/DESIGN.md §4).
+
+    Cliques with equal signatures share the exact same Kronecker factor chain
+    ``⊗_i Sub_{n_i}``, so their measurements/reconstructions stack into the
+    batch axis of a single kernel chain.  Insertion order preserves the input
+    clique order within each group.
+    """
+    from collections import defaultdict
+    groups: Dict[tuple, List[Clique]] = defaultdict(list)
+    for clique in cliques:
+        groups[tuple(_clique_dims(domain, clique))].append(clique)
+    return dict(groups)
+
+
+def _noise_dtype():
+    return jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+
+
 def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
-            key: jax.Array, use_kernel: bool = False) -> Dict[Clique, Measurement]:
+            key: jax.Array, use_kernel: bool = False,
+            batched: bool = True) -> Dict[Clique, Measurement]:
     """Run every base mechanism in the plan (Algorithm 1, continuous Gaussian).
 
     ``marginals[A]`` must hold the exact marginal table for every A in the
     plan's closure (flattened or tensor shaped).  Base mechanisms are
-    independent; each consumes its own fold of ``key``.
+    independent; each consumes its own fold of ``key`` — the fold order is
+    fixed by ``plan.cliques`` so batched and loop execution draw identical
+    noise.
+
+    ``batched=True`` (default) groups cliques by attribute-size signature and
+    stacks all ``[v; z]`` pairs of a group into the batch axis of ONE kernel
+    chain per group (fused Pallas chain when ``use_kernel``, batched jnp
+    otherwise) instead of launching one chain per clique.  ``batched=False``
+    keeps the historical per-clique loop (oracle / benchmark baseline).
     """
-    out: Dict[Clique, Measurement] = {}
     keys = jax.random.split(key, len(plan.cliques))
-    for k, clique in zip(keys, plan.cliques):
+    keymap = dict(zip(plan.cliques, keys))
+    if not batched:
+        return _measure_loop(plan, marginals, keymap, use_kernel)
+
+    out: Dict[Clique, Measurement] = {}
+    dtype = _noise_dtype()
+    for dims, cliques in signature_groups(plan.domain, plan.cliques).items():
+        m = int(np.prod(dims)) if dims else 1
+        g = len(cliques)
+        vs = []
+        for c in cliques:
+            v = jnp.asarray(marginals[c]).reshape(-1)
+            if v.shape[0] != m:
+                raise ValueError(f"marginal for {c} has {v.shape[0]} cells, want {m}")
+            vs.append(v)
+        z = jnp.stack([jax.random.normal(keymap[c], (m,), dtype=dtype)
+                       for c in cliques])
+        sig = jnp.asarray([math.sqrt(plan.sigmas[c]) for c in cliques])[:, None]
+        if not dims:
+            om = jnp.stack(vs) + sig * z
+        else:
+            x = jnp.concatenate([jnp.stack(vs), z], axis=0)   # (2g, m)
+            factors = [sub_matrix(n) for n in dims]
+            if use_kernel:
+                from repro.kernels.kron_matvec.fused import fused_chain_matvec
+                y = fused_chain_matvec(factors, x, dims)
+            else:
+                y = kron_matvec_batched(factors, x, dims)
+            om = y[:g] + sig * y[g:]
+        for i, c in enumerate(cliques):
+            out[c] = Measurement(c, np.asarray(om[i]), plan.sigmas[c])
+    return out
+
+
+def _measure_loop(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
+                  keymap: Mapping[Clique, jax.Array],
+                  use_kernel: bool) -> Dict[Clique, Measurement]:
+    """Historical per-clique device loop — one chain per clique (bench baseline)."""
+    out: Dict[Clique, Measurement] = {}
+    dtype = _noise_dtype()
+    for clique in plan.cliques:
         dims = _clique_dims(plan.domain, clique)
         v = jnp.asarray(marginals[clique]).reshape(-1)
         m = int(np.prod(dims)) if clique else 1
         if v.shape[0] != m:
             raise ValueError(f"marginal for {clique} has {v.shape[0]} cells, want {m}")
         sigma = math.sqrt(plan.sigmas[clique])
-        z = jax.random.normal(k, (m,), dtype=jnp.float64
-                              if jax.config.read("jax_enable_x64") else jnp.float32)
+        z = jax.random.normal(keymap[clique], (m,), dtype=dtype)
         hv = residual_answer(plan.domain, clique, v, use_kernel)
         hz = residual_answer(plan.domain, clique, z, use_kernel)
         out[clique] = Measurement(clique, np.asarray(hv + sigma * hz), plan.sigmas[clique])
@@ -116,12 +183,8 @@ def measure_np_batched(plan: Plan, marginals: Mapping[Clique, np.ndarray],
     cache; see EXPERIMENTS.md §Perf).  The batch axis is the same "left"
     dimension the Pallas kernel tiles on TPU.
     """
-    from collections import defaultdict
-    groups: Dict[tuple, list] = defaultdict(list)
-    for clique in plan.cliques:
-        groups[tuple(_clique_dims(plan.domain, clique))].append(clique)
     out: Dict[Clique, Measurement] = {}
-    for dims, cliques in groups.items():
+    for dims, cliques in signature_groups(plan.domain, plan.cliques).items():
         m = int(np.prod(dims)) if dims else 1
         for s0 in range(0, len(cliques), chunk):
             cs = cliques[s0:s0 + chunk]

@@ -40,6 +40,37 @@ def _u_factors(domain: Domain, clique: Clique, sub_clique: Clique):
     return factors, in_dims
 
 
+def u_chain_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
+    """Per-axis factors T_i = [ Sub_{n_i}^† | (1/n_i)·1 ]  (n_i × n_i).
+
+    The key identity behind batched reconstruction (docs/DESIGN.md §5): for
+    every A' ⊆ A, U_{A←A'} ω_{A'} equals (⊗_{i∈A} T_i) e_{A'}, where e_{A'}
+    embeds ω_{A'} into the (n_i)_{i∈A} tensor at axis-i slots 0..n_i-2 when
+    i ∈ A' and slot n_i-1 otherwise.  Distinct subsets occupy *disjoint*
+    slot regions, so Algorithm 2's sum over 2^|A| subset matvecs collapses to
+    ONE Kronecker chain applied to the sum of embeddings.
+    """
+    out = []
+    for i in clique:
+        n = domain.attributes[i].size
+        out.append(np.hstack([sub_pinv(n), np.full((n, 1), 1.0 / n)]))
+    return out
+
+
+def embed_subset_answers(plan: Plan, measurements: Mapping[Clique, Measurement],
+                         clique: Clique, dtype=np.float64) -> np.ndarray:
+    """Sum of subset embeddings Σ_{A'⊆A} e_{A'} — input of the merged U-chain."""
+    sizes = plan.domain.clique_sizes(clique)
+    t = np.zeros(sizes, dtype=dtype)
+    for sub in subsets(clique):
+        sc = set(sub)
+        region = tuple(slice(0, n - 1) if i in sc else slice(n - 1, n)
+                       for i, n in zip(clique, sizes))
+        shape = tuple(n - 1 if i in sc else 1 for i, n in zip(clique, sizes))
+        t[region] = np.asarray(measurements[sub].omega, dtype=dtype).reshape(shape)
+    return t
+
+
 def reconstruct_marginal(plan: Plan, measurements: Mapping[Clique, Measurement],
                          clique: Clique, xp=np) -> np.ndarray:
     """Unbiased noisy answer to the marginal on ``clique`` (Algorithm 2).
@@ -61,9 +92,71 @@ def reconstruct_marginal(plan: Plan, measurements: Mapping[Clique, Measurement],
     return q
 
 
+def reconstruct_marginal_fast(plan: Plan, measurements: Mapping[Clique, Measurement],
+                              clique: Clique, use_kernel: bool = False,
+                              xp=np) -> np.ndarray:
+    """Algorithm 2 as ONE Kronecker chain instead of 2^|A| subset matvecs.
+
+    Embeds all subset answers into disjoint slots of one (n_i)_{i∈A} tensor
+    (see :func:`u_chain_factors`) and applies the merged chain ⊗ T_i once —
+    on the fused Pallas path when ``use_kernel``.
+    """
+    if not clique:
+        return xp.asarray(measurements[()].omega, dtype=float).reshape(-1)
+    sizes = plan.domain.clique_sizes(clique)
+    t = embed_subset_answers(plan, measurements, clique)
+    factors = u_chain_factors(plan.domain, clique)
+    if use_kernel:
+        from repro.kernels.kron_matvec.fused import fused_chain_matvec
+        return np.asarray(fused_chain_matvec(factors, t.reshape(-1), sizes))
+    matvec = kron_matvec_np if xp is np else kron_matvec
+    return matvec(factors, t.reshape(-1), sizes)
+
+
 def reconstruct_all(plan: Plan, measurements: Mapping[Clique, Measurement],
                     xp=np) -> Dict[Clique, np.ndarray]:
     return {c: reconstruct_marginal(plan, measurements, c, xp) for c in plan.workload.cliques}
+
+
+def reconstruct_all_batched(plan: Plan, measurements: Mapping[Clique, Measurement],
+                            cliques: Optional[Sequence[Clique]] = None,
+                            use_kernel: Optional[bool] = None
+                            ) -> Dict[Clique, np.ndarray]:
+    """Batched Algorithm 2: same-signature marginals share one kernel chain.
+
+    Marginals are grouped by attribute-size signature (they share the merged
+    U-chain ⊗ T_i exactly), their embedded subset-answer tensors are stacked
+    into the batch axis, and each group runs as a single fused chain
+    (docs/DESIGN.md §5) — 2^|A| × #cliques matvecs collapse to one pallas_call
+    per signature.
+
+    ``use_kernel=None`` resolves per backend: the fused Pallas chain on TPU,
+    the batched jnp path elsewhere (interpret-mode Pallas is a correctness
+    vehicle, not a CPU fast path — see benchmarks/kernels_bench.py).
+    """
+    from .mechanism import signature_groups
+    from .kron import kron_matvec_batched
+    if use_kernel is None:
+        from repro.kernels.kron_matvec._layout import interpret_default
+        use_kernel = not interpret_default()
+    cliques = list(plan.workload.cliques if cliques is None else cliques)
+    out: Dict[Clique, np.ndarray] = {}
+    for sizes, group in signature_groups(plan.domain, cliques).items():
+        if not sizes:
+            for c in group:
+                out[c] = np.asarray(measurements[()].omega, dtype=float).reshape(-1)
+            continue
+        x = np.stack([embed_subset_answers(plan, measurements, c).reshape(-1)
+                      for c in group])
+        factors = u_chain_factors(plan.domain, group[0])
+        if use_kernel:
+            from repro.kernels.kron_matvec.fused import fused_chain_matvec
+            y = np.asarray(fused_chain_matvec(factors, x, sizes))
+        else:
+            y = np.asarray(kron_matvec_batched(factors, x, sizes))
+        for i, c in enumerate(group):
+            out[c] = y[i]
+    return out
 
 
 def marginal_variance(plan: Plan, clique: Clique) -> float:

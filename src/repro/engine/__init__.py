@@ -1,2 +1,3 @@
+from .engine import EngineStats, MarginalEngine
 from .sharded import sharded_marginals, sharded_measure
 from .corpus_stats import corpus_marginal_release

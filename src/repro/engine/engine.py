@@ -1,0 +1,143 @@
+"""MarginalEngine: a plan compiled once, served many times.
+
+The ROADMAP's north star is serving heavy marginal-query traffic; this module
+is the seed of that server.  At construction the engine walks the plan's
+signature groups (docs/DESIGN.md §4–5), plans every fused kernel chain it will
+ever need — the measurement chains ⊗ Sub_{n_i} over the closure and the
+reconstruction chains ⊗ T_i over the workload — and warms the jit cache so
+that ``measure`` / ``reconstruct`` calls on the hot path never trace or
+compile.  The jit cache is keyed on the chain *signature* (per-axis factor
+shapes + batch padding), so domains with repeated attribute sizes share
+compilations.
+
+Usage::
+
+    engine = MarginalEngine(plan)
+    meas   = engine.measure(marginals, key)      # one fused chain per signature
+    tables = engine.reconstruct(meas)            # one fused chain per signature
+    # or end-to-end:
+    tables, meas = engine.release(marginals, key)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domain import Clique
+from repro.core.mechanism import Measurement, measure, signature_groups
+from repro.core.reconstruct import reconstruct_all_batched, u_chain_factors
+from repro.core.residual import sub_matrix
+from repro.core.select import Plan
+from repro.kernels.kron_matvec._layout import pad_to
+from repro.kernels.kron_matvec.fused import fused_chain_matvec, plan_chain
+
+
+@dataclass
+class EngineStats:
+    measure_calls: int = 0
+    reconstruct_calls: int = 0
+    measure_signatures: int = 0
+    reconstruct_signatures: int = 0
+    fused_chains: int = 0          # chains that fit the fused VMEM budget
+    fallback_chains: int = 0       # chains planned onto the per-axis path
+    compile_warmups: int = 0
+
+
+class MarginalEngine:
+    """Compile a plan's kernel chains once; serve measure/reconstruct traffic.
+
+    Parameters
+    ----------
+    plan:        selection-phase output (σ²_A per closure clique).
+    use_kernel:  route chains through the fused Pallas kernel or the batched
+                 jnp path (still signature-batched, no pallas_call).  The
+                 default ``None`` resolves per backend — Pallas on TPU,
+                 batched jnp elsewhere, where interpret-mode kernels would
+                 only add Python overhead.
+    precompile:  trace/compile every chain at construction so serving calls
+                 are cache hits (set False for tiny one-shot jobs).
+    """
+
+    def __init__(self, plan: Plan, use_kernel: Optional[bool] = None,
+                 precompile: bool = True):
+        from repro.kernels.kron_matvec._layout import interpret_default
+        self.plan = plan
+        self.use_kernel = (not interpret_default()) if use_kernel is None \
+            else use_kernel
+        self.stats = EngineStats()
+        self._measure_groups = signature_groups(plan.domain, plan.cliques)
+        self._reconstruct_groups = signature_groups(plan.domain,
+                                                    plan.workload.cliques)
+        self.stats.measure_signatures = len(self._measure_groups)
+        self.stats.reconstruct_signatures = len(self._reconstruct_groups)
+        self._chain_plans: Dict[tuple, object] = {}
+        for dims, cliques in self._measure_groups.items():
+            if dims:
+                self._register_chain([sub_matrix(n) for n in dims], dims,
+                                     2 * len(cliques))
+        for dims, cliques in self._reconstruct_groups.items():
+            if dims:
+                self._register_chain(
+                    u_chain_factors(plan.domain, cliques[0]), dims,
+                    len(cliques))
+        if precompile and self.use_kernel:
+            self._warmup()
+
+    def _register_chain(self, factors: List, dims: Tuple[int, ...],
+                        batch: int) -> None:
+        cp = plan_chain(factors, dims, batch=batch)
+        key = (dims, cp.signature, pad_to(batch, cp.block_l))
+        if key not in self._chain_plans:
+            self._chain_plans[key] = (cp, factors, batch)
+            if cp.fused_ok:
+                self.stats.fused_chains += 1
+            else:
+                self.stats.fallback_chains += 1
+
+    def _warmup(self) -> None:
+        """Run every planned chain once on zeros — fills the pallas/jit cache
+        for the exact batch paddings the serving path will request."""
+        for (dims, _sig, _bp), (cp, factors, batch) in self._chain_plans.items():
+            x = jnp.zeros((batch, cp.n_in), jnp.float32)
+            fused_chain_matvec(factors, x, dims).block_until_ready()
+            self.stats.compile_warmups += 1
+
+    # ------------------------------------------------------------------ serve
+    def measure(self, marginals: Mapping[Clique, jnp.ndarray],
+                key: jax.Array) -> Dict[Clique, Measurement]:
+        """Algorithm 1 over the whole closure: one fused chain per signature."""
+        self.stats.measure_calls += 1
+        return measure(self.plan, marginals, key, use_kernel=self.use_kernel,
+                       batched=True)
+
+    def reconstruct(self, measurements: Mapping[Clique, Measurement],
+                    cliques: Optional[Sequence[Clique]] = None
+                    ) -> Dict[Clique, np.ndarray]:
+        """Algorithm 2 for the workload (or ``cliques``): batched merged chains."""
+        self.stats.reconstruct_calls += 1
+        return reconstruct_all_batched(self.plan, measurements, cliques,
+                                       use_kernel=self.use_kernel)
+
+    def release(self, marginals: Mapping[Clique, jnp.ndarray], key: jax.Array
+                ) -> Tuple[Dict[Clique, np.ndarray], Dict[Clique, Measurement]]:
+        """measure → reconstruct in one call; returns (tables, measurements)."""
+        meas = self.measure(marginals, key)
+        return self.reconstruct(meas), meas
+
+    # ------------------------------------------------------------- introspect
+    def chain_plans(self) -> List[dict]:
+        """Layout report: one row per compiled chain (for ops/debugging)."""
+        rows = []
+        for (dims, _sig, b_p), (cp, _f, batch) in self._chain_plans.items():
+            rows.append(dict(dims=dims, batch=batch, batch_padded=b_p,
+                             w_in=cp.w_in, w_out=cp.w_out, block_l=cp.block_l,
+                             vmem_bytes=cp.vmem_bytes, fused=cp.fused_ok))
+        return rows
+
+    def variances(self) -> Dict[Clique, float]:
+        return self.plan.workload_variances()

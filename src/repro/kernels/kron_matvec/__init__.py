@@ -1,2 +1,5 @@
+from .fused import (ChainPlan, fused_cache_info, fused_chain_matvec,
+                    plan_chain)
 from .ops import kron_matvec_kernel, residual_measure_kernel
 from .ref import kron_matvec_ref, residual_measure_ref
+from .stats import CHAIN_STATS, chain_stats, reset_chain_stats

@@ -1,0 +1,220 @@
+r"""Fused multi-axis Pallas kernel: a whole Kronecker factor chain per call.
+
+The per-axis kernel (kron_matvec.py) pays a full zero-pad → HBM round-trip →
+slice for every factor of ``⊗_i S_i``.  This module plans the layout of the
+*entire* chain up front and runs it as ONE ``pallas_call``:
+
+  * the batch axis B (stacked [v; z] pairs, stacked same-signature cliques —
+    see docs/DESIGN.md §4) is the only gridded axis; each grid step owns a
+    ``(block_l, W)`` tile;
+  * the tile is loaded into VMEM once, reshaped to ``(block_l, n_1, …, n_k)``
+    and contracted with every factor *in registers/VMEM* — factors are tiny
+    (attribute-sized) and ride along whole;
+  * exactly one zero-pad on entry (B → B_p sublane multiple, flat width
+    N → W_in lane multiple) and one slice on exit (docs/DESIGN.md §3.4);
+    the pad/slice/pallas_call counts are instrumented in stats.py so tests
+    can assert the contract.
+
+Chains whose working tile would overflow the VMEM budget fall back to the
+per-axis kernel (ops.py), which tiles R and is correct at any size — the
+fused path is the fast path, not the only path.
+
+Validated in interpret mode on CPU against the float64 numpy oracle
+(core.kron.kron_matvec_np); on TPU backends the real Mosaic lowering is used.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ._layout import interpret_default as _interpret_default
+from ._layout import normalize_factor as _normalize_factor
+from ._layout import pad_to as _pad_to
+from .stats import CHAIN_STATS
+
+_LANE = 128          # minor-axis (lane) padding quantum
+_SUB = 8             # sublane padding quantum (float32)
+_MAX_BLOCK_L = 128   # batch rows per grid step
+_VMEM_BUDGET = 4 * 1024 * 1024   # bytes of working tile the fused kernel may use
+
+
+@dataclass(frozen=True)
+class ChainPlan:
+    """Static layout plan for one fused chain (docs/DESIGN.md §3.3).
+
+    The plan is the jit-cache key: chains with the same signature — per-axis
+    (m_i, n_i) shapes, batch padding and tile widths — share one compiled
+    kernel regardless of the factor *values*.
+    """
+
+    in_dims: Tuple[int, ...]                       # per-axis input sizes n_i
+    fshapes: Tuple[Optional[Tuple[int, int]], ...]  # (m_i, n_i) or None (identity)
+    out_dims: Tuple[int, ...]                      # per-axis output sizes
+    n_in: int                                      # prod(in_dims)
+    n_out: int                                     # prod(out_dims)
+    w_in: int                                      # lane-padded input width
+    w_out: int                                     # lane-padded output width
+    block_l: int                                   # batch rows per grid step
+    vmem_bytes: int                                # working-tile footprint
+    fused_ok: bool                                 # fits the VMEM budget?
+
+    @property
+    def signature(self) -> tuple:
+        return (self.in_dims, self.fshapes, self.block_l)
+
+
+def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
+               block_l: Optional[int] = None,
+               vmem_budget: int = _VMEM_BUDGET) -> ChainPlan:
+    """Plan the fused layout of ``(⊗_i factors[i])`` applied to a (batch, N) stack."""
+    dims = tuple(int(d) for d in dims)
+    specs: List[Optional[Tuple[int, int]]] = []
+    out_dims: List[int] = []
+    for f, n in zip(factors, dims):
+        s = _normalize_factor(f, n)
+        if s is None:
+            specs.append(None)
+            out_dims.append(n)
+        else:
+            if s.shape[1] != n:
+                raise ValueError(f"factor {s.shape} does not match axis size {n}")
+            specs.append((int(s.shape[0]), n))
+            out_dims.append(int(s.shape[0]))
+    n_in = math.prod(dims) if dims else 1
+    n_out = math.prod(out_dims) if out_dims else 1
+    if block_l is None:
+        block_l = min(_MAX_BLOCK_L, _pad_to(max(batch, 1), _SUB))
+    w_in = _pad_to(n_in, _LANE)
+    w_out = _pad_to(n_out, _LANE)
+    # Peak per-step tensor while the chain runs in VMEM: input tile + output
+    # tile + the largest intermediate (applying factors left to right).
+    sizes = [n_in]
+    cur = list(dims)
+    for axis, spec in enumerate(specs):
+        if spec is None:
+            continue
+        cur[axis] = spec[0]
+        sizes.append(math.prod(cur))
+    vmem = 4 * block_l * (w_in + w_out + max(sizes))
+    return ChainPlan(dims, tuple(specs), tuple(out_dims), n_in, n_out,
+                     w_in, w_out, block_l, vmem, vmem <= vmem_budget)
+
+
+def _make_fused_kernel(plan: ChainPlan):
+    """Kernel body: the whole chain on one VMEM-resident (block_l, W) tile."""
+    dims, specs = plan.in_dims, plan.fshapes
+    n_in, n_out, w_out, bl = plan.n_in, plan.n_out, plan.w_out, plan.block_l
+
+    def kernel(*refs):
+        s_refs, x_ref, o_ref = refs[:-2], refs[-2], refs[-1]
+        x = x_ref[:, :n_in].reshape((bl,) + dims)
+        si = 0
+        for axis, spec in enumerate(specs):
+            if spec is None:
+                continue
+            s = s_refs[si][...]
+            si += 1
+            # Contract axis ``axis+1`` with S by rotating it to the minor
+            # position — the dot_general then maps onto the MXU with the
+            # (block_l × leading-dims) batch as rows (docs/DESIGN.md §3.2).
+            x = jnp.moveaxis(x, axis + 1, x.ndim - 1)
+            x = jax.lax.dot_general(
+                x, s, dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            x = jnp.moveaxis(x, x.ndim - 1, axis + 1)
+        y = x.reshape(bl, n_out)
+        o_ref[...] = jnp.zeros((bl, w_out), y.dtype).at[:, :n_out].set(
+            y).astype(o_ref.dtype)
+
+    return kernel
+
+
+@lru_cache(maxsize=None)
+def _build_fused_call(signature: tuple, b_p: int, interpret: bool):
+    """Compile (and cache, keyed on the chain signature) the fused pallas_call."""
+    in_dims, fshapes, block_l = signature
+    plan = plan_chain([np.zeros(s) if s else None for s in fshapes],
+                      in_dims, batch=b_p, block_l=block_l)
+    kernel = _make_fused_kernel(plan)
+    n_factors = sum(1 for s in fshapes if s is not None)
+    grid = (b_p // block_l,)
+    in_specs = [pl.BlockSpec(s, lambda i: (0, 0))
+                for s in fshapes if s is not None]
+    in_specs.append(pl.BlockSpec((block_l, plan.w_in), lambda i: (i, 0)))
+
+    def call(*args):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_l, plan.w_out), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b_p, plan.w_out), jnp.float32),
+            interpret=interpret,
+        )(*args)
+
+    return jax.jit(call), plan
+
+
+def fused_cache_info():
+    return _build_fused_call.cache_info()
+
+
+def _fallback_per_axis(s_facs: List[Optional[np.ndarray]], x: jnp.ndarray,
+                       dims: Tuple[int, ...], interpret: bool) -> jnp.ndarray:
+    """Per-axis kernel on the batched stack: identity on the batch axis."""
+    from .ops import kron_matvec_kernel   # lazy: ops imports stats, not fused
+    b = x.shape[0]
+    y = kron_matvec_kernel([None] + list(s_facs), x.reshape(-1),
+                           (b,) + dims, interpret=interpret)
+    return y.reshape(b, -1)
+
+
+def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
+                       interpret: Optional[bool] = None,
+                       block_l: Optional[int] = None,
+                       vmem_budget: int = _VMEM_BUDGET) -> jnp.ndarray:
+    """Apply ``⊗_i factors[i]`` to a stack ``x`` of shape (B, N) (or flat (N,)).
+
+    One pad, one pallas_call, one slice per chain (stats.py instruments the
+    contract).  Chains too large for VMEM fall back to the per-axis kernel.
+    Returns shape (B, n_out) — or flat (n_out,) if the input was flat.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    x = jnp.asarray(x, jnp.float32)
+    flat_in = x.ndim == 1
+    if flat_in:
+        x = x[None, :]
+    b = x.shape[0]
+    plan = plan_chain(factors, dims, batch=b, block_l=block_l,
+                      vmem_budget=vmem_budget)
+    if x.shape[1] != plan.n_in:
+        raise ValueError(f"x width {x.shape[1]} != prod(dims) {plan.n_in}")
+    s_facs = [_normalize_factor(f, n) for f, n in zip(factors, dims)]
+    live = [s for s in s_facs if s is not None]
+    if not live:
+        return x[0] if flat_in else x
+    if not plan.fused_ok:
+        CHAIN_STATS.fallback_chains += 1
+        y = _fallback_per_axis(s_facs, x, plan.in_dims, interpret)
+        return y[0] if flat_in else y
+
+    b_p = _pad_to(b, plan.block_l)
+    # ONE pad: batch to the sublane grid, flat width to the lane grid.
+    x_p = jnp.zeros((b_p, plan.w_in), jnp.float32).at[:b, :plan.n_in].set(x)
+    CHAIN_STATS.pads += 1
+    call, _ = _build_fused_call(plan.signature, b_p, interpret)
+    out = call(*[jnp.asarray(s) for s in live], x_p)
+    CHAIN_STATS.pallas_calls += 1
+    CHAIN_STATS.fused_chains += 1
+    # ONE slice back to the true (B, n_out) extent.
+    y = out[:b, :plan.n_out]
+    CHAIN_STATS.slices += 1
+    return y[0] if flat_in else y

@@ -5,7 +5,7 @@ reduces to chains of  y = (I_L ⊗ S ⊗ I_R) x  applications — a *batched sma
 GEMM*: view x as (L, n, R) and contract the small per-attribute matrix
 S (m, n) with the middle axis.
 
-TPU adaptation (DESIGN.md §3): attribute sizes n are far below the 128×128
+TPU adaptation (docs/DESIGN.md §3): attribute sizes n are far below the 128×128
 MXU tile, so the kernel gets its arithmetic intensity from the (L, R) batch
 layout instead:
 

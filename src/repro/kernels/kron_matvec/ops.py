@@ -1,10 +1,16 @@
-"""jit'd wrappers around the Pallas kron kernels.
+"""jit'd wrappers around the per-axis Pallas kron kernel.
 
 ``kron_matvec_kernel`` applies a full chain ⊗_i S_i by invoking the per-axis
 kernel once per non-trivial factor, padding (m, n) to sublane multiples of 8
-and R to lane multiples of 512, then slicing back.  ``residual_measure_kernel``
-fuses the measurement Hv + σHz by stacking [v, z] into the L (batch) axis so
-both transforms share every S tile — the Alg 1/Alg 5 hot path in one sweep.
+and R to lane multiples of 512, then slicing back (docs/DESIGN.md §3.2).
+``residual_measure_kernel`` fuses the measurement Hv + σHz by stacking [v, z]
+into the L (batch) axis so both transforms share every S tile — the
+Alg 1/Alg 5 hot path in one sweep.
+
+This is the *fallback and oracle* path: it pays one pad → HBM round-trip →
+slice per factor.  The production chain path is fused.py, which plans the
+layout once and keeps the working tile in VMEM across all factors
+(docs/DESIGN.md §3.3–3.4).
 
 interpret=True (automatic on CPU) runs the kernel body in Python for
 correctness validation; on TPU backends the real Mosaic lowering is used.
@@ -20,28 +26,14 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from ._layout import interpret_default as _interpret_default
+from ._layout import normalize_factor as _normalize_factor
+from ._layout import pad_to as _pad_to
 from .kron_matvec import kron_axis_matvec
+from .stats import CHAIN_STATS
 
 _LANE = 512
 _SUB = 8
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _normalize_factor(f, n: int) -> Optional[np.ndarray]:
-    if f is None:
-        return None
-    if isinstance(f, str):
-        if f == "ones":
-            return np.ones((1, n), dtype=np.float32)
-        raise ValueError(f)
-    return np.asarray(f, dtype=np.float32)
 
 
 def _apply_axis(s: np.ndarray, x: jnp.ndarray, L: int, n: int, R: int,
@@ -52,11 +44,15 @@ def _apply_axis(s: np.ndarray, x: jnp.ndarray, L: int, n: int, R: int,
     s_p = jnp.zeros((m_p, n_p), x.dtype).at[:m, :n].set(jnp.asarray(s, x.dtype))
     xr = x.reshape(L, n, R)
     x_p = jnp.zeros((L_p, n_p, R_p), x.dtype).at[:L, :n, :R].set(xr)
+    CHAIN_STATS.pads += 1
     block_l = min(_SUB, L_p)
     block_r = min(_LANE, R_p)
     y = kron_axis_matvec(s_p, x_p, block_l=block_l, block_r=block_r,
                          interpret=interpret)
-    return y[:L, :m, :R].reshape(L * m * R)
+    CHAIN_STATS.pallas_calls += 1
+    out = y[:L, :m, :R].reshape(L * m * R)
+    CHAIN_STATS.slices += 1
+    return out
 
 
 def kron_matvec_kernel(factors: Sequence, x: jnp.ndarray, dims: Sequence[int],

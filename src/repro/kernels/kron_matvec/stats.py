@@ -1,0 +1,42 @@
+"""HBM-traffic instrumentation for the kron kernel chains.
+
+Counters are bumped by the host-side wrappers (ops.py / fused.py) every time
+an array is zero-padded into a kernel layout, sliced back out of one, or a
+``pallas_call`` is issued.  They exist so tests and benchmarks can *assert*
+the layout contract of docs/DESIGN.md §3.4 — the fused chain performs exactly
+one pad and one slice per chain, while the per-axis fallback pays one of each
+per non-trivial factor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ChainStats:
+    pads: int = 0            # HBM zero-pad materializations
+    slices: int = 0          # HBM slice-backs
+    pallas_calls: int = 0    # pallas_call invocations
+    fused_chains: int = 0    # chains served by the fused kernel
+    fallback_chains: int = 0  # chains that fell back to the per-axis kernel
+
+    def snapshot(self) -> dict:
+        return dict(pads=self.pads, slices=self.slices,
+                    pallas_calls=self.pallas_calls,
+                    fused_chains=self.fused_chains,
+                    fallback_chains=self.fallback_chains)
+
+
+CHAIN_STATS = ChainStats()
+
+
+def reset_chain_stats() -> None:
+    CHAIN_STATS.pads = 0
+    CHAIN_STATS.slices = 0
+    CHAIN_STATS.pallas_calls = 0
+    CHAIN_STATS.fused_chains = 0
+    CHAIN_STATS.fallback_chains = 0
+
+
+def chain_stats() -> dict:
+    return CHAIN_STATS.snapshot()

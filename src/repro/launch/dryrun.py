@@ -125,7 +125,7 @@ def _pick_microbatches(target: int, global_batch: int, batch_shards: int) -> int
 
 
 def shape_rules(shape: str, cfg: ModelConfig):
-    """Per-shape logical-rule overrides (divisibility-safe; DESIGN.md §6)."""
+    """Per-shape logical-rule overrides (divisibility-safe; docs/DESIGN.md §6)."""
     rules = dict(DEFAULT_RULES)
     if shape == "long_500k":
         rules["batch"] = None                        # batch = 1

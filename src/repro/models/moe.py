@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN with expert parallelism (shard_map + all_to_all).
 
-Layout (see DESIGN.md §6):
+Layout (see docs/DESIGN.md §6):
   * tokens sequence-sharded over ('pod','data') × 'model' going in;
   * experts sharded over 'model' (kimi 384/16 = 24 per shard, deepseek 160/16 = 10);
   * each expert's d_ff sharded over 'data' (per-shard weight slice), producing a

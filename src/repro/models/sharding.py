@@ -2,7 +2,7 @@
 
 Model code annotates activations/params with *logical* axis names; a rule set
 maps them to mesh axes.  One rule set is divisibility-safe for all 10 assigned
-architectures (see DESIGN.md §6): feature dims shard over ``model``, batch over
+architectures (see docs/DESIGN.md §6): feature dims shard over ``model``, batch over
 (``pod``, ``data``), sequence over ``model`` in attention/FFN compute regions
 (sequence parallelism), vocab over ``model``, experts over ``model``.
 """

@@ -1,0 +1,77 @@
+"""Import hypothesis if available; otherwise a minimal deterministic fallback.
+
+``hypothesis`` is a dev-extra (pyproject.toml ``[project.optional-dependencies]
+dev``), but the suite must collect and run without it — CI images and the
+hermetic benchmark container don't ship it.  The fallback implements just the
+strategy surface these tests use (``integers``, ``lists``, ``tuples``) and a
+``@given`` that replays a fixed number of seeded pseudo-random examples, so
+property tests degrade to deterministic fuzzing instead of import errors.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - exercised when hypothesis absent
+    import functools
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 15
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class _Strategies:
+        """The subset of hypothesis.strategies used by this suite."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(size)]
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*parts):
+            return _Strategy(lambda rng: tuple(p.example(rng) for p in parts))
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", _DEFAULT_EXAMPLES)
+                # crc32, not hash(): str hashing is salted per process and
+                # would make failing examples unreproducible across runs.
+                rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    fn(*args, *(s.example(rng) for s in strategies), **kwargs)
+            # Hide the wrapped signature: pytest must not try to resolve the
+            # strategy-filled parameters as fixtures.
+            del wrapper.__wrapped__
+            return wrapper
+        return decorate
+
+    def settings(deadline=None, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def decorate(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return decorate

@@ -1,0 +1,235 @@
+"""Fused chain kernel + signature-batched device paths vs float64 oracles.
+
+Covers the docs/DESIGN.md §3.4 layout contract (exactly one pad and one slice
+per fused chain), odd/non-padded attribute sizes, the VMEM fallback, and the
+batched measurement/reconstruction paths against ``kron_matvec_np`` /
+``measure_np`` / the subset-loop reconstruction.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (Domain, MarginalWorkload, exact_marginals_from_x,
+                        measure, measure_np, reconstruct_all,
+                        reconstruct_all_batched, reconstruct_marginal,
+                        reconstruct_marginal_fast, select_sum_of_variances)
+from repro.core.kron import kron_matvec_batched, kron_matvec_np
+from repro.core.reconstruct import embed_subset_answers, u_chain_factors
+from repro.core.residual import sub_matrix
+from repro.kernels.kron_matvec.fused import fused_chain_matvec, plan_chain
+from repro.kernels.kron_matvec.ops import residual_measure_kernel
+from repro.kernels.kron_matvec.stats import chain_stats, reset_chain_stats
+
+
+class _ZeroRng:
+    def standard_normal(self, n):
+        return np.zeros(n)
+
+
+def _plan(sizes, cliques, budget=1.0):
+    dom = Domain.create(sizes)
+    wk = MarginalWorkload(dom, tuple(cliques))
+    return select_sum_of_variances(wk, budget)
+
+
+# --------------------------------------------------------------- fused chain
+
+@pytest.mark.parametrize("dims,batch", [
+    ([2], 1), ([3], 5), ([2, 3], 4), ([5, 7, 3], 2), ([17, 6], 9),
+    ([9, 2, 4], 1), ([10, 10, 10], 3), ([13], 130),
+])
+def test_fused_chain_matches_np_oracle(dims, batch, rng):
+    """Odd / non-padded sizes: fused chain vs the float64 numpy oracle."""
+    facs = [sub_matrix(n) for n in dims]
+    x = rng.standard_normal((batch, int(np.prod(dims)))).astype(np.float32)
+    got = np.asarray(fused_chain_matvec(facs, x, dims))
+    want = np.stack([kron_matvec_np(facs, x[i], dims) for i in range(batch)])
+    scale = max(np.abs(want).max(), 1e-6)
+    assert np.max(np.abs(got - want)) / scale < 2e-5
+
+
+def test_fused_chain_mixed_factor_kinds(rng):
+    """None (identity), 'ones' (marginalize) and rectangular factors fuse."""
+    dims = [4, 5, 3]
+    facs = [None, "ones", rng.standard_normal((7, 3))]
+    x = rng.standard_normal((6, 60)).astype(np.float32)
+    got = np.asarray(fused_chain_matvec(facs, x, dims))
+    want = np.stack([kron_matvec_np(facs, x[i], dims) for i in range(6)])
+    assert got.shape == want.shape == (6, 4 * 1 * 7)
+    scale = max(np.abs(want).max(), 1e-6)
+    assert np.max(np.abs(got - want)) / scale < 2e-5
+
+
+def test_fused_chain_exactly_one_pad_and_slice(rng):
+    """The acceptance contract: ONE pad, ONE pallas_call, ONE slice per chain."""
+    dims = [5, 7, 3]
+    facs = [sub_matrix(n) for n in dims]
+    x = rng.standard_normal((10, 105)).astype(np.float32)
+    reset_chain_stats()
+    fused_chain_matvec(facs, x, dims)
+    st = chain_stats()
+    assert st["pads"] == 1 and st["slices"] == 1 and st["pallas_calls"] == 1, st
+    assert st["fused_chains"] == 1 and st["fallback_chains"] == 0
+
+
+def test_per_axis_fallback_pays_one_pad_per_factor(rng):
+    """Contrast case: the per-axis oracle path pads/slices once per factor."""
+    from repro.kernels.kron_matvec.ops import kron_matvec_kernel
+    dims = [5, 7, 3]
+    facs = [sub_matrix(n) for n in dims]
+    x = rng.standard_normal(105).astype(np.float32)
+    reset_chain_stats()
+    kron_matvec_kernel(facs, x, dims)
+    st = chain_stats()
+    assert st["pads"] == len(dims) and st["slices"] == len(dims)
+
+
+def test_fused_vmem_guard_falls_back(rng):
+    """Chains over the VMEM budget fall back to the per-axis kernel, exactly."""
+    dims = [8, 9]
+    facs = [sub_matrix(n) for n in dims]
+    x = rng.standard_normal((4, 72)).astype(np.float32)
+    reset_chain_stats()
+    got = np.asarray(fused_chain_matvec(facs, x, dims, vmem_budget=16))
+    st = chain_stats()
+    assert st["fallback_chains"] == 1 and st["fused_chains"] == 0
+    want = np.stack([kron_matvec_np(facs, x[i], dims) for i in range(4)])
+    assert np.max(np.abs(got - want)) / np.abs(want).max() < 2e-5
+
+
+def test_plan_chain_layout():
+    plan = plan_chain([sub_matrix(10)] * 3, [10, 10, 10], batch=64)
+    assert plan.n_in == 1000 and plan.n_out == 9 ** 3
+    assert plan.w_in % 128 == 0 and plan.w_out % 128 == 0
+    assert plan.block_l % 8 == 0 and plan.fused_ok
+    # identity factors are dropped from the contraction list
+    plan2 = plan_chain([None, sub_matrix(4)], [6, 4], batch=1)
+    assert plan2.fshapes == (None, (3, 4))
+    assert plan2.out_dims == (6, 3)
+
+
+# ----------------------------------------------- residual_measure_kernel
+
+@pytest.mark.parametrize("dims", [[2], [3], [4, 7], [5, 3, 2], [17, 6]])
+def test_residual_measure_kernel_vs_np_oracle(dims, rng):
+    """Fused [v;z] measurement kernel vs the float64 numpy oracle."""
+    facs = [sub_matrix(n) for n in dims]
+    m = int(np.prod(dims))
+    v = rng.standard_normal(m).astype(np.float32)
+    z = rng.standard_normal(m).astype(np.float32)
+    sigma = 0.7
+    got = np.asarray(residual_measure_kernel(facs, v, z, sigma, dims))
+    want = (kron_matvec_np(facs, v.astype(np.float64), dims)
+            + sigma * kron_matvec_np(facs, z.astype(np.float64), dims))
+    scale = max(np.abs(want).max(), 1e-6)
+    assert np.max(np.abs(got - want)) / scale < 2e-5
+
+
+# --------------------------------------------------- batched measurement
+
+def test_batched_measure_matches_loop_and_np_oracle(rng):
+    """Signature-batched device measurement == per-clique loop == fp64 oracle."""
+    plan = _plan([3, 4, 2, 3], [(0, 1), (1, 2), (2, 3), (0, 3), (1,)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    key = jax.random.PRNGKey(11)
+    loop = measure(plan, margs, key, use_kernel=False, batched=False)
+    bat = measure(plan, margs, key, use_kernel=False, batched=True)
+    fus = measure(plan, margs, key, use_kernel=True, batched=True)
+    # float64 oracle: replay the same per-clique key folds on the host
+    keys = jax.random.split(key, len(plan.cliques))
+    for k, c in zip(keys, plan.cliques):
+        dims = plan.domain.clique_sizes(c)
+        m = int(np.prod(dims)) if c else 1
+        z = np.asarray(jax.random.normal(k, (m,)), np.float64)
+        v = np.asarray(margs[c], np.float64).reshape(-1)
+        sig = math.sqrt(plan.sigmas[c])
+        if c:
+            facs = [sub_matrix(n) for n in dims]
+            want = (kron_matvec_np(facs, v, dims)
+                    + sig * kron_matvec_np(facs, z, dims))
+        else:
+            want = v + sig * z
+        scale = max(np.abs(want).max(), 1.0)
+        for got in (loop, bat, fus):
+            assert np.max(np.abs(got[c].omega - want)) / scale < 2e-4, c
+
+
+def test_batched_measure_one_chain_per_signature(rng):
+    """The fused path issues one pad/call/slice per signature group, not per clique."""
+    from repro.core.mechanism import signature_groups
+    plan = _plan([3, 3, 3, 4], [(0, 1), (1, 2), (0, 2), (2, 3)])
+    margs = exact_marginals_from_x(
+        plan.domain, plan.cliques,
+        rng.integers(0, 5, plan.domain.universe_size()).astype(float))
+    groups = signature_groups(plan.domain, plan.cliques)
+    n_nonempty = sum(1 for dims in groups if dims)
+    reset_chain_stats()
+    measure(plan, margs, jax.random.PRNGKey(0), use_kernel=True, batched=True)
+    st = chain_stats()
+    assert st["pallas_calls"] == n_nonempty
+    assert st["pads"] == n_nonempty and st["slices"] == n_nonempty
+    assert n_nonempty < len(plan.cliques)   # batching actually collapsed work
+
+
+# ------------------------------------------------- batched reconstruction
+
+def test_merged_embedding_identity_fp64(rng):
+    """Σ_{A'⊆A} U_{A←A'} ω_{A'}  ==  (⊗ T_i) Σ e_{A'}  exactly in float64."""
+    plan = _plan([3, 4, 2], [(0, 1, 2), (0, 1), (1, 2)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    meas = measure_np(plan, margs, rng)
+    for c in plan.workload.cliques:
+        want = reconstruct_marginal(plan, meas, c)       # subset-loop oracle
+        sizes = plan.domain.clique_sizes(c)
+        merged = kron_matvec_np(u_chain_factors(plan.domain, c),
+                                embed_subset_answers(plan, meas, c).reshape(-1),
+                                sizes)
+        assert np.allclose(want, merged, atol=1e-9), c
+
+
+def test_reconstruct_fast_and_batched_vs_oracle(rng):
+    plan = _plan([3, 4, 2, 4], [(0, 1), (1, 2), (2, 3), (0, 3)])
+    x = rng.integers(0, 9, plan.domain.universe_size()).astype(float)
+    margs = exact_marginals_from_x(plan.domain, plan.cliques, x)
+    meas = measure_np(plan, margs, _ZeroRng())
+    ref = reconstruct_all(plan, meas)
+    fused = reconstruct_all_batched(plan, meas, use_kernel=True)
+    jnp_b = reconstruct_all_batched(plan, meas, use_kernel=False)
+    for c in plan.workload.cliques:
+        truth = exact_marginals_from_x(plan.domain, [c], x)[c]
+        assert np.allclose(ref[c], truth, atol=1e-8)     # zero noise: exact
+        scale = max(np.abs(ref[c]).max(), 1.0)
+        assert np.max(np.abs(fused[c] - ref[c])) / scale < 2e-5, c
+        assert np.max(np.abs(jnp_b[c] - ref[c])) / scale < 2e-5, c
+        single = reconstruct_marginal_fast(plan, meas, c, use_kernel=True)
+        assert np.max(np.abs(single - ref[c])) / scale < 2e-5, c
+
+
+def test_reconstruct_batched_groups_same_signature(rng):
+    """Same-signature marginals share ONE fused chain."""
+    plan = _plan([3, 3, 3], [(0, 1), (1, 2), (0, 2)])
+    margs = exact_marginals_from_x(
+        plan.domain, plan.cliques,
+        rng.integers(0, 5, plan.domain.universe_size()).astype(float))
+    meas = measure_np(plan, margs, _ZeroRng())
+    reset_chain_stats()
+    reconstruct_all_batched(plan, meas, use_kernel=True)
+    st = chain_stats()
+    assert st["pallas_calls"] == 1    # three 3×3 marginals, one signature
+    assert st["pads"] == 1 and st["slices"] == 1
+
+
+def test_empty_clique_paths(rng):
+    dom = Domain.create([4])
+    wk = MarginalWorkload(dom, ((),))
+    plan = select_sum_of_variances(wk, 1.0)
+    margs = {(): np.array([7.0]), (0,): np.arange(4, dtype=float)}
+    meas = measure(plan, margs, jax.random.PRNGKey(0), batched=True)
+    assert meas[()].omega.shape == (1,)
+    out = reconstruct_all_batched(plan, meas)
+    assert out[()].shape == (1,)

@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Domain, MarginalWorkload, select_sum_of_variances
 from repro.core.kron import kron_expand, kron_matvec_np

@@ -1,7 +1,7 @@
 """Theorem 1 & Lemma 1: residual bases are orthogonal, complete, closed-form."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Domain, all_kway, closure, subsets
 from repro.core.residual import (expand_marginal, expand_residual, sub_matrix,

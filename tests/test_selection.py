@@ -4,7 +4,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import Domain, MarginalWorkload, all_kway, pcost_of_plan
 from repro.core.select import (_coefficients, select_max_variance,
