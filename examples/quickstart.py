@@ -4,7 +4,11 @@ select (optimal noise plan) -> measure (Alg 1; optionally hardened discrete
 Gaussian, Alg 3) -> reconstruct (Alg 2) -> confidence intervals from the
 closed-form variances (Thm 4).
 
-Run:  PYTHONPATH=src python examples/quickstart.py [--discrete]
+``--plus`` instead runs the ResidualPlanner+ pipeline (§7, Algs 4–6) on a
+range-query workload — every numeric attribute answers all contiguous-range
+queries, served through the signature-batched ``PlusEngine``.
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--discrete | --plus]
 """
 import argparse
 import math
@@ -21,13 +25,51 @@ from repro.data.tabular import adult_domain, marginals_from_records, synthetic_r
 from repro.engine.sharded import sharded_measure
 
 
+def main_plus():
+    """Range queries via ResidualPlanner+: select_plus -> PlusEngine."""
+    from repro.core import Domain
+    from repro.core.plus import PlusSchema, select_plus
+    from repro.engine import PlusEngine
+
+    # 4 attributes; the first two are numeric and answer ALL contiguous
+    # ranges (n(n+1)/2 queries per axis), the rest are plain marginals.
+    dom = Domain.create([16, 12, 5, 3], kinds=["numeric", "numeric",
+                                               "categorical", "categorical"])
+    wk = all_kway(dom, 2, include_lower=True)
+    schema = PlusSchema.create(dom, ["range", "range", "identity", "identity"],
+                               strategy_mode="hier")
+    plan = select_plus(wk, schema, pcost_budget=1.0, objective="sov")
+    print(f"RP+ plan: {len(plan.cliques)} base mechanisms, "
+          f"rmse={plan.rmse():.3f} pcost={plan.pcost:.6f}")
+
+    records = synthetic_records(dom, 50_000, seed=0)
+    margs = marginals_from_records(dom, plan.cliques, records)
+
+    engine = PlusEngine(plan)        # chains compiled once at construction
+    tables, meas = engine.release(margs, jax.random.PRNGKey(0))
+
+    # the (0, 1) table now answers every range × range query pair
+    c = (0, 1)
+    n_ranges = [dom.attributes[i].size * (dom.attributes[i].size + 1) // 2
+                for i in c]
+    print(f"marginal {c}: {tables[c].shape[0]} = {n_ranges[0]}x{n_ranges[1]} "
+          f"range-pair answers, sov={plan.sov(c):.3f}")
+    budget = PrivacyBudget.from_zcdp(0.5)
+    budget.charge(plan.pcost)
+    print("privacy report:", budget.report())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--discrete", action="store_true",
                     help="use the hardened discrete-Gaussian path (Alg 3)")
+    ap.add_argument("--plus", action="store_true",
+                    help="ResidualPlanner+ range-query pipeline (PlusEngine)")
     ap.add_argument("--objective", default="sum_of_variances",
                     choices=["sum_of_variances", "max_variance"])
     args = ap.parse_args()
+    if args.plus:
+        return main_plus()
 
     dom = adult_domain()
     wk = all_kway(dom, 2, include_lower=True)          # all <=2-way marginals

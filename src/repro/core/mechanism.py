@@ -58,24 +58,39 @@ def residual_answer(domain: Domain, clique: Clique, marginal: jnp.ndarray,
     return kron_matvec(factors, jnp.asarray(marginal), dims)
 
 
-def signature_groups(domain: Domain, cliques: Sequence[Clique]
-                     ) -> Dict[tuple, List[Clique]]:
-    """Group cliques by attribute-size signature (docs/DESIGN.md §4).
+def signature_groups(domain: Domain, cliques: Sequence[Clique],
+                     axis_key=None) -> Dict[tuple, List[Clique]]:
+    """Group cliques by per-axis signature (docs/DESIGN.md §4, §8).
 
-    Cliques with equal signatures share the exact same Kronecker factor chain
-    ``⊗_i Sub_{n_i}``, so their measurements/reconstructions stack into the
-    batch axis of a single kernel chain.  Insertion order preserves the input
-    clique order within each group.
+    ``axis_key(i)`` maps an attribute index to a hashable per-axis token; the
+    default is the attribute size, under which cliques with equal signatures
+    share the exact same Kronecker factor chain ``⊗_i Sub_{n_i}`` (the
+    plain-marginal chain is fully determined by the size).  ResidualPlanner+
+    passes a token that also carries the per-attribute ``(Sub_i, Γ_i)`` factor
+    shapes and values (``plus_axis_token`` in ``core/plus.py``), since
+    Γ_i ≠ Sub_i for non-identity bases and equal sizes no longer imply equal
+    chains.  Cliques in one group stack into the batch axis of a single kernel
+    chain.  Insertion order preserves the input clique order within each group.
     """
     from collections import defaultdict
+    if axis_key is None:
+        axis_key = lambda i: domain.attributes[i].size  # noqa: E731
     groups: Dict[tuple, List[Clique]] = defaultdict(list)
     for clique in cliques:
-        groups[tuple(_clique_dims(domain, clique))].append(clique)
+        groups[tuple(axis_key(i) for i in clique)].append(clique)
     return dict(groups)
 
 
-def _noise_dtype():
+def noise_dtype():
+    """Default dtype for Gaussian noise draws: float64 iff jax x64 is enabled.
+
+    Every measurement path (core, engine, sharded) threads its noise dtype
+    from here unless explicitly overridden, so device and host draws agree.
+    """
     return jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+
+
+_noise_dtype = noise_dtype   # backward-compat alias
 
 
 def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
@@ -96,12 +111,13 @@ def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
     keeps the historical per-clique loop (oracle / benchmark baseline).
     """
     keys = jax.random.split(key, len(plan.cliques))
-    keymap = dict(zip(plan.cliques, keys))
     if not batched:
-        return _measure_loop(plan, marginals, keymap, use_kernel)
+        return _measure_loop(plan, marginals, dict(zip(plan.cliques, keys)),
+                             use_kernel)
 
     out: Dict[Clique, Measurement] = {}
     dtype = _noise_dtype()
+    pos = {c: i for i, c in enumerate(plan.cliques)}
     for dims, cliques in signature_groups(plan.domain, plan.cliques).items():
         m = int(np.prod(dims)) if dims else 1
         g = len(cliques)
@@ -111,8 +127,10 @@ def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
             if v.shape[0] != m:
                 raise ValueError(f"marginal for {c} has {v.shape[0]} cells, want {m}")
             vs.append(v)
-        z = jnp.stack([jax.random.normal(keymap[c], (m,), dtype=dtype)
-                       for c in cliques])
+        # One vectorized draw per group (bit-identical to the per-clique
+        # loop: vmapped threefry matches per-key normal draws exactly).
+        z = jax.vmap(lambda k: jax.random.normal(k, (m,), dtype=dtype))(
+            keys[jnp.asarray([pos[c] for c in cliques])])
         sig = jnp.asarray([math.sqrt(plan.sigmas[c]) for c in cliques])[:, None]
         if not dims:
             om = jnp.stack(vs) + sig * z

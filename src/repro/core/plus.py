@@ -63,6 +63,30 @@ def build_w(kind: str, n: int) -> np.ndarray:
             "range": w_range, "total": w_total}[kind](n)
 
 
+def classify_w(W: np.ndarray) -> str:
+    """Structural kind of a basic matrix: identity | prefix | range | total | custom.
+
+    The device reconstruction path (engine/plus_engine.py) uses the kind to
+    apply W_i *implicitly* — prefix as a cumsum epilogue, range as cumsum +
+    prefix-difference — so the O(n²)-row ``w_range`` never enters a dense
+    matvec on the hot path (docs/DESIGN.md §8).  Detection is structural, so
+    a custom-passed matrix that happens to be a prefix/range matrix still gets
+    the implicit path.
+    """
+    W = np.asarray(W)
+    m, n = W.shape
+    if m == 1 and np.array_equal(W, np.ones((1, n))):
+        return "total"
+    if m == n:
+        if np.array_equal(W, np.eye(n)):
+            return "identity"
+        if np.array_equal(W, np.tril(np.ones((n, n)))):
+            return "prefix"
+    if m == n * (n + 1) // 2 and np.array_equal(W, w_range(n)):
+        return "range"
+    return "custom"
+
+
 def s_hierarchical(n: int, branching: int = 2) -> np.ndarray:
     """Hierarchical (H-tree) strategy: identity leaves + interval sums per level.
 
@@ -96,6 +120,7 @@ class AttrBasis:
     identity: bool
     beta: float                  # max diag of Subᵀ (ΓΓᵀ)⁻¹ Sub  (Thm 7)
     sub_pinv: np.ndarray         # Sub^† (n x r)
+    kind: str = "custom"         # classify_w(W): drives the implicit-W epilogue
 
     @property
     def fnorm2(self) -> float:
@@ -125,7 +150,7 @@ def attr_basis(W: np.ndarray, S: Optional[np.ndarray] = None,
         spinv = sub_pinv(n)
         gram_inv = np.linalg.inv(Sub @ Sub.T)
         beta = float(np.max(np.diag(Sub.T @ gram_inv @ Sub)))
-        return AttrBasis(n, W, S, Sub, Gamma, True, beta, spinv)
+        return AttrBasis(n, W, S, Sub, Gamma, True, beta, spinv, kind="identity")
     # Algorithm 4 general branch (eigh replaces rank-deficient Cholesky).
     P1 = S - (S @ np.ones((n, 1))) @ np.ones((1, n)) / n
     M = P1.T @ P1
@@ -136,7 +161,7 @@ def attr_basis(W: np.ndarray, S: Optional[np.ndarray] = None,
     Gamma = np.eye(Sub.shape[0])
     spinv = np.linalg.pinv(Sub)
     beta = float(np.max(np.einsum("ij,ij->j", Sub, Sub)))   # Γ=I ⇒ diag SubᵀSub
-    return AttrBasis(n, W, S, Sub, Gamma, False, beta, spinv)
+    return AttrBasis(n, W, S, Sub, Gamma, False, beta, spinv, kind=classify_w(W))
 
 
 @dataclass
@@ -393,3 +418,118 @@ def reconstruct_plus(plan: PlusPlan, measurements: Mapping[Clique, Measurement],
         return q
     wfacs = [schema.bases[i].W for i in clique]
     return kron_matvec_np(wfacs, q, [schema.bases[i].n for i in clique])
+
+
+# ---------------------------------------------------------------------------
+# Chain factors for the device engine (docs/DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def plus_axis_token(basis: AttrBasis) -> tuple:
+    """Hashable per-axis signature token for generalized batching.
+
+    Plain marginals batch on attribute *size* because ``Sub_n`` is fully
+    determined by n.  Here Γ_i ≠ Sub_i for non-identity bases and the factor
+    values depend on (W_i, S_i), so the token carries the factor shapes (the
+    kernel jit-cache key) plus value digests (stacking rows into one chain
+    additionally requires equal factor *values* — a digest collision would
+    silently measure cliques with the wrong factors, so the digest is
+    cryptographic, not a checksum).  Construction is deterministic, so equal
+    (W, S) inputs yield equal tokens.
+    """
+    import hashlib
+
+    def _dig(a: np.ndarray) -> bytes:
+        return hashlib.blake2b(
+            np.ascontiguousarray(a, dtype=np.float64).tobytes(),
+            digest_size=16).digest()
+
+    return (basis.n, basis.kind, basis.Sub.shape, basis.Gamma.shape,
+            basis.W.shape, _dig(basis.Sub), _dig(basis.Gamma), _dig(basis.W))
+
+
+def plus_signature_groups(schema: PlusSchema, cliques: Sequence[Clique]
+                          ) -> Dict[tuple, List[Clique]]:
+    """Group cliques by generalized per-axis ``(Sub_i, Γ_i, W_i)`` signature."""
+    from .mechanism import signature_groups
+    tokens = [plus_axis_token(b) for b in schema.bases]
+    return signature_groups(schema.domain, cliques,
+                            axis_key=lambda i: tokens[i])
+
+
+def measure_chain_split(schema: PlusSchema, clique: Clique):
+    """Factors of the staged Alg 5 measurement chains (docs/DESIGN.md §8).
+
+    ω = (⊗ Sub_i) v + σ (⊗ Γ_i) z splits per axis: identity-basis axes have
+    Γ_i = Sub_i (both streams share the factor), general axes have Γ_i = I
+    (the noise stream skips the axis).  Stage A applies the general-axis
+    ``Sub_i`` to the v rows only (input dims ``dims`` → ``zdims``); stage B
+    applies the identity-axis ``Sub_i`` to the stacked [v'; z] rows at input
+    dims ``zdims``.  All-identity cliques degenerate to the plain-marginal
+    single chain; all-general cliques need no stage B chain at all.
+
+    Returns ``(dims, zdims, stage_a, stage_b)``.
+    """
+    dims: List[int] = []
+    zdims: List[int] = []
+    stage_a: List[Optional[np.ndarray]] = []
+    stage_b: List[Optional[np.ndarray]] = []
+    for i in clique:
+        b = schema.bases[i]
+        dims.append(b.n)
+        zdims.append(b.Gamma.shape[1])
+        if b.identity:
+            stage_a.append(None)
+            stage_b.append(b.Sub)
+        else:
+            stage_a.append(b.Sub)
+            stage_b.append(None)
+    return dims, zdims, stage_a, stage_b
+
+
+def t_chain_factors_plus(schema: PlusSchema, clique: Clique) -> List[np.ndarray]:
+    """Per-axis factors T_i = [ Sub_i^† | (1/n_i)·1 ]  (n_i × (r_i+1)).
+
+    The PR-1 merged-subset identity (core/reconstruct.py, docs/DESIGN.md §5)
+    generalizes verbatim: for every A' ⊆ A, U_{A←A'} ω_{A'} equals
+    (⊗_{i∈A} T_i) e_{A'} with ω_{A'} embedded at axis-i slots 0..r_i−1 when
+    i ∈ A' and slot r_i otherwise — distinct subsets occupy disjoint slot
+    regions, so Algorithm 6's 2^|A| subset matvecs collapse into ONE chain.
+    """
+    out = []
+    for i in clique:
+        b = schema.bases[i]
+        out.append(np.hstack([b.sub_pinv, np.full((b.n, 1), 1.0 / b.n)]))
+    return out
+
+
+def embed_subset_answers_plus(plan: PlusPlan,
+                              measurements: Mapping[Clique, Measurement],
+                              clique: Clique, dtype=np.float64) -> np.ndarray:
+    """Sum of subset embeddings Σ_{A'⊆A} e_{A'} — input of the merged T-chain."""
+    from .reconstruct import subset_slot_region
+    schema = plan.schema
+    rdims = tuple(schema.bases[i].Sub.shape[0] + 1 for i in clique)
+    t = np.zeros(rdims, dtype=dtype)
+    for sub in subsets(clique):
+        region, shape = subset_slot_region(clique, sub, rdims)
+        t[region] = np.asarray(measurements[sub].omega,
+                               dtype=dtype).reshape(shape)
+    return t
+
+
+def reconstruct_plus_merged(plan: PlusPlan,
+                            measurements: Mapping[Clique, Measurement],
+                            clique: Clique) -> np.ndarray:
+    """Float64 oracle of the merged-chain Algorithm 6: one chain ⊗ (W_i T_i).
+
+    Numerically identical (1e-9) to :func:`reconstruct_plus`; the device
+    engine (engine/plus_engine.py) runs the same merged chain batched, with
+    prefix/range W_i applied implicitly instead of via the dense product.
+    """
+    if not clique:
+        return np.asarray(measurements[()].omega, dtype=np.float64).reshape(-1)
+    schema = plan.schema
+    t = embed_subset_answers_plus(plan, measurements, clique)
+    facs = [schema.bases[i].W @ tf
+            for i, tf in zip(clique, t_chain_factors_plus(schema, clique))]
+    return kron_matvec_np(facs, t.reshape(-1), t.shape)

@@ -57,16 +57,32 @@ def u_chain_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
     return out
 
 
+def subset_slot_region(clique: Clique, sub_clique: Clique,
+                       slot_dims: Sequence[int]):
+    """(region, shape) of subset A' in the merged-chain slot tensor.
+
+    Axis i has ``slot_dims[i]`` slots: the measured part occupies slots
+    ``0..slot_dims[i]−2`` when i ∈ A', the marginalized part the single last
+    slot otherwise.  Distinct subsets occupy disjoint regions — the identity
+    behind merged reconstruction (§5), shared by the plain path
+    (slot_dims = n_i), the RP+ path (slot_dims = r_i+1,
+    ``core/plus.py``) and the batched engine embedding
+    (``engine/plus_engine.py``): one definition, three consumers.
+    """
+    sc = set(sub_clique)
+    region = tuple(slice(0, r - 1) if i in sc else slice(r - 1, r)
+                   for i, r in zip(clique, slot_dims))
+    shape = tuple(r - 1 if i in sc else 1 for i, r in zip(clique, slot_dims))
+    return region, shape
+
+
 def embed_subset_answers(plan: Plan, measurements: Mapping[Clique, Measurement],
                          clique: Clique, dtype=np.float64) -> np.ndarray:
     """Sum of subset embeddings Σ_{A'⊆A} e_{A'} — input of the merged U-chain."""
     sizes = plan.domain.clique_sizes(clique)
     t = np.zeros(sizes, dtype=dtype)
     for sub in subsets(clique):
-        sc = set(sub)
-        region = tuple(slice(0, n - 1) if i in sc else slice(n - 1, n)
-                       for i, n in zip(clique, sizes))
-        shape = tuple(n - 1 if i in sc else 1 for i, n in zip(clique, sizes))
+        region, shape = subset_slot_region(clique, sub, sizes)
         t[region] = np.asarray(measurements[sub].omega, dtype=dtype).reshape(shape)
     return t
 

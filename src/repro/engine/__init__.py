@@ -1,3 +1,4 @@
 from .engine import EngineStats, MarginalEngine
+from .plus_engine import PlusEngine
 from .sharded import sharded_marginals, sharded_measure
 from .corpus_stats import corpus_marginal_release

@@ -48,7 +48,41 @@ class EngineStats:
     compile_warmups: int = 0
 
 
-class MarginalEngine:
+class ChainRegistry:
+    """Chain-plan bookkeeping shared by MarginalEngine and PlusEngine.
+
+    One definition of the plan key (dims, signature, padded batch) and the
+    layout report keeps the two engines' stats and warmup coverage in exact
+    agreement.  Subclasses provide ``self.stats`` (EngineStats) and their own
+    warmup loops over ``self._chain_plans``, whose values are
+    ``(ChainPlan, factors, batch, epilogue)`` tuples.
+    """
+
+    _chain_plans: Dict[tuple, tuple]
+
+    def _register_chain(self, factors: List, dims: Tuple[int, ...],
+                        batch: int, epilogue: Optional[tuple] = None) -> None:
+        cp = plan_chain(factors, dims, batch=batch, epilogue=epilogue)
+        key = (tuple(dims), cp.signature, pad_to(batch, cp.block_l))
+        if key not in self._chain_plans:
+            self._chain_plans[key] = (cp, factors, batch, epilogue)
+            if cp.fused_ok:
+                self.stats.fused_chains += 1
+            else:
+                self.stats.fallback_chains += 1
+
+    def chain_plans(self) -> List[dict]:
+        """Layout report: one row per compiled chain (for ops/debugging)."""
+        rows = []
+        for (dims, sig, b_p), (cp, _f, batch, _e) in self._chain_plans.items():
+            rows.append(dict(dims=dims, batch=batch, batch_padded=b_p,
+                             w_in=cp.w_in, w_out=cp.w_out, block_l=cp.block_l,
+                             vmem_bytes=cp.vmem_bytes, fused=cp.fused_ok,
+                             epilogue=sig[-1]))
+        return rows
+
+
+class MarginalEngine(ChainRegistry):
     """Compile a plan's kernel chains once; serve measure/reconstruct traffic.
 
     Parameters
@@ -88,21 +122,11 @@ class MarginalEngine:
         if precompile and self.use_kernel:
             self._warmup()
 
-    def _register_chain(self, factors: List, dims: Tuple[int, ...],
-                        batch: int) -> None:
-        cp = plan_chain(factors, dims, batch=batch)
-        key = (dims, cp.signature, pad_to(batch, cp.block_l))
-        if key not in self._chain_plans:
-            self._chain_plans[key] = (cp, factors, batch)
-            if cp.fused_ok:
-                self.stats.fused_chains += 1
-            else:
-                self.stats.fallback_chains += 1
-
     def _warmup(self) -> None:
         """Run every planned chain once on zeros — fills the pallas/jit cache
         for the exact batch paddings the serving path will request."""
-        for (dims, _sig, _bp), (cp, factors, batch) in self._chain_plans.items():
+        for (dims, _sig, _bp), (cp, factors, batch, _epi) in \
+                self._chain_plans.items():
             x = jnp.zeros((batch, cp.n_in), jnp.float32)
             fused_chain_matvec(factors, x, dims).block_until_ready()
             self.stats.compile_warmups += 1
@@ -130,14 +154,5 @@ class MarginalEngine:
         return self.reconstruct(meas), meas
 
     # ------------------------------------------------------------- introspect
-    def chain_plans(self) -> List[dict]:
-        """Layout report: one row per compiled chain (for ops/debugging)."""
-        rows = []
-        for (dims, _sig, b_p), (cp, _f, batch) in self._chain_plans.items():
-            rows.append(dict(dims=dims, batch=batch, batch_padded=b_p,
-                             w_in=cp.w_in, w_out=cp.w_out, block_l=cp.block_l,
-                             vmem_bytes=cp.vmem_bytes, fused=cp.fused_ok))
-        return rows
-
     def variances(self) -> Dict[Clique, float]:
         return self.plan.workload_variances()

@@ -23,8 +23,28 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.domain import Clique, Domain
-from repro.core.mechanism import Measurement, residual_answer
+from repro.core.mechanism import Measurement, noise_dtype, residual_answer
 from repro.core.select import Plan
+
+
+# Engines cached per (plan identity, path, dtype): repeated sharded_measure
+# calls on one plan reuse the jitted group transforms instead of re-tracing.
+# The engine holds the plan strongly, so a cached id() cannot be recycled
+# while its entry lives; the size bound caps retained memory.
+_PLUS_ENGINE_CACHE: Dict[tuple, object] = {}
+_PLUS_ENGINE_CACHE_MAX = 16
+
+
+def _plus_engine_for(plan, use_kernel: bool, dtype):
+    from repro.engine.plus_engine import PlusEngine
+    ck = (id(plan), bool(use_kernel), jnp.dtype(dtype).name)
+    eng = _PLUS_ENGINE_CACHE.get(ck)
+    if eng is None or eng.plan is not plan:
+        if len(_PLUS_ENGINE_CACHE) >= _PLUS_ENGINE_CACHE_MAX:
+            _PLUS_ENGINE_CACHE.clear()
+        eng = _PLUS_ENGINE_CACHE[ck] = PlusEngine(
+            plan, use_kernel=use_kernel, precompile=False, dtype=dtype)
+    return eng
 
 
 def _clique_strides(domain: Domain, clique: Clique) -> Tuple[np.ndarray, int]:
@@ -35,26 +55,32 @@ def _clique_strides(domain: Domain, clique: Clique) -> Tuple[np.ndarray, int]:
     return strides, int(np.prod(sizes)) if clique else 1
 
 
-def _local_marginal(records, cols, strides, n_cells):
+def _local_marginal(records, cols, strides, n_cells, dtype=jnp.float32):
     """One-hot-matmul histogram of the clique columns (records: (N, n_attrs))."""
     if len(cols) == 0:
-        return jnp.asarray([records.shape[0]], jnp.float32)
+        return jnp.asarray([records.shape[0]], dtype)
     flat = jnp.zeros((records.shape[0],), jnp.int32)
     for c, s in zip(cols, strides):
         flat = flat + records[:, c] * int(s)
-    oh = jax.nn.one_hot(flat, n_cells, dtype=jnp.float32)
+    oh = jax.nn.one_hot(flat, n_cells, dtype=dtype)
     return jnp.sum(oh, axis=0)
 
 
 def sharded_marginals(domain: Domain, cliques: Sequence[Clique],
-                      records: jnp.ndarray, mesh: Optional[Mesh] = None
-                      ) -> Dict[Clique, jnp.ndarray]:
-    """Exact marginal tables for every clique, records sharded over data axes."""
+                      records: jnp.ndarray, mesh: Optional[Mesh] = None,
+                      dtype=None) -> Dict[Clique, jnp.ndarray]:
+    """Exact marginal tables for every clique, records sharded over data axes.
+
+    ``dtype=None`` resolves to :func:`repro.core.mechanism.noise_dtype` so the
+    tables match the precision of the residual transform consuming them.
+    """
+    dtype = noise_dtype() if dtype is None else dtype
     cliques = list(cliques)
     meta = [(_clique_strides(domain, c)) for c in cliques]
 
     if mesh is None:
-        return {c: _local_marginal(records, list(c), meta[i][0], meta[i][1])
+        return {c: _local_marginal(records, list(c), meta[i][0], meta[i][1],
+                                   dtype)
                 for i, c in enumerate(cliques)}
 
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -62,7 +88,7 @@ def sharded_marginals(domain: Domain, cliques: Sequence[Clique],
     def body(rec):
         outs = []
         for i, c in enumerate(cliques):
-            h = _local_marginal(rec, list(c), meta[i][0], meta[i][1])
+            h = _local_marginal(rec, list(c), meta[i][0], meta[i][1], dtype)
             outs.append(jax.lax.psum(h, data_axes + tuple(
                 a for a in mesh.axis_names if a not in data_axes)))
         return tuple(outs)
@@ -75,20 +101,37 @@ def sharded_marginals(domain: Domain, cliques: Sequence[Clique],
     return {c: o for c, o in zip(cliques, outs)}
 
 
-def sharded_measure(plan: Plan, records: jnp.ndarray,
+def sharded_measure(plan, records: jnp.ndarray,
                     key: jax.Array, mesh: Optional[Mesh] = None,
-                    use_kernel: bool = False) -> Dict[Clique, Measurement]:
-    """Distributed Algorithm 1: sharded marginalization + residual transform."""
-    margs = sharded_marginals(plan.domain, plan.cliques, records, mesh)
+                    use_kernel: bool = False,
+                    dtype=None) -> Dict[Clique, Measurement]:
+    """Distributed Algorithms 1/5: sharded marginalization + residual transform.
+
+    ``plan`` is either a plain :class:`~repro.core.select.Plan` or a
+    ResidualPlanner+ :class:`~repro.core.plus.PlusPlan` — the + path routes
+    the replicated transform through the signature-batched
+    :class:`~repro.engine.plus_engine.PlusEngine` with the generalized
+    ``(Sub_i, Γ_i)`` factors.  ``dtype`` governs the marginal tables and the
+    noise draws; ``None`` resolves to
+    :func:`repro.core.mechanism.noise_dtype` (float64 under jax x64) rather
+    than the historical hard-coded float32, so the distributed path matches
+    the core path's precision.
+    """
+    from repro.core.plus import PlusPlan
+    dtype = noise_dtype() if dtype is None else dtype
+    domain = plan.schema.domain if isinstance(plan, PlusPlan) else plan.domain
+    margs = sharded_marginals(domain, plan.cliques, records, mesh, dtype=dtype)
+    if isinstance(plan, PlusPlan):
+        return _plus_engine_for(plan, use_kernel, dtype).measure(margs, key)
     out: Dict[Clique, Measurement] = {}
     keys = jax.random.split(key, len(plan.cliques))
     for k, clique in zip(keys, plan.cliques):
-        dims = [plan.domain.attributes[i].size for i in clique]
+        dims = [domain.attributes[i].size for i in clique]
         m = int(np.prod(dims)) if clique else 1
         sigma = math.sqrt(plan.sigmas[clique])
-        z = jax.random.normal(k, (m,), jnp.float32)
-        hv = residual_answer(plan.domain, clique, margs[clique], use_kernel)
-        hz = residual_answer(plan.domain, clique, z, use_kernel)
+        z = jax.random.normal(k, (m,), dtype)
+        hv = residual_answer(domain, clique, margs[clique], use_kernel)
+        hz = residual_answer(domain, clique, z, use_kernel)
         out[clique] = Measurement(clique, np.asarray(hv + sigma * hz),
                                   plan.sigmas[clique])
     return out

@@ -65,17 +65,29 @@ class ChainPlan:
     block_l: int                                   # batch rows per grid step
     vmem_bytes: int                                # working-tile footprint
     fused_ok: bool                                 # fits the VMEM budget?
+    epilogue: Tuple[Optional[str], ...] = ()       # per-axis implicit-W op
 
     @property
     def signature(self) -> tuple:
-        return (self.in_dims, self.fshapes, self.block_l)
+        return (self.in_dims, self.fshapes, self.block_l, self.epilogue)
 
 
 def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
                block_l: Optional[int] = None,
-               vmem_budget: int = _VMEM_BUDGET) -> ChainPlan:
-    """Plan the fused layout of ``(⊗_i factors[i])`` applied to a (batch, N) stack."""
+               vmem_budget: int = _VMEM_BUDGET,
+               epilogue: Optional[Sequence[Optional[str]]] = None) -> ChainPlan:
+    """Plan the fused layout of ``(⊗_i factors[i])`` applied to a (batch, N) stack.
+
+    ``epilogue[i]`` is an optional shape-preserving implicit-W op applied to
+    axis i after the chain: ``'cumsum'`` (prefix-sum along the axis, the
+    implicit form of the lower-triangular prefix matrix — docs/DESIGN.md §8).
+    """
     dims = tuple(int(d) for d in dims)
+    epilogue = tuple(epilogue) if epilogue is not None else (None,) * len(dims)
+    if len(epilogue) != len(dims):
+        raise ValueError(f"epilogue length {len(epilogue)} != {len(dims)} axes")
+    if any(op not in (None, "cumsum") for op in epilogue):
+        raise ValueError(f"unknown epilogue op in {epilogue}")
     specs: List[Optional[Tuple[int, int]]] = []
     out_dims: List[int] = []
     for f, n in zip(factors, dims):
@@ -104,14 +116,40 @@ def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
         cur[axis] = spec[0]
         sizes.append(math.prod(cur))
     vmem = 4 * block_l * (w_in + w_out + max(sizes))
+    # The in-kernel cumsum epilogue contracts with an iota-built (n, n)
+    # triangular operand; it lives in VMEM alongside the tile.
+    vmem += 4 * sum(out_dims[a] ** 2 for a, op in enumerate(epilogue)
+                    if op == "cumsum")
     return ChainPlan(dims, tuple(specs), tuple(out_dims), n_in, n_out,
-                     w_in, w_out, block_l, vmem, vmem <= vmem_budget)
+                     w_in, w_out, block_l, vmem, vmem <= vmem_budget, epilogue)
+
+
+def _tril_ones(n: int) -> jnp.ndarray:
+    """(n, n) lower-triangular ones, built from iotas inside the kernel.
+
+    ``y = x @ trilᵀ`` is the cumsum along the contracted axis — the implicit
+    MXU form of the dense prefix matrix: the operand is synthesized in
+    VMEM/registers and never materialized in HBM (docs/DESIGN.md §8).
+    """
+    r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return (c <= r).astype(jnp.float32)
 
 
 def _make_fused_kernel(plan: ChainPlan):
     """Kernel body: the whole chain on one VMEM-resident (block_l, W) tile."""
-    dims, specs = plan.in_dims, plan.fshapes
+    dims, specs, epilogue = plan.in_dims, plan.fshapes, plan.epilogue
     n_in, n_out, w_out, bl = plan.n_in, plan.n_out, plan.w_out, plan.block_l
+
+    def _contract(x, s, axis):
+        # Contract axis ``axis+1`` with S by rotating it to the minor
+        # position — the dot_general then maps onto the MXU with the
+        # (block_l × leading-dims) batch as rows (docs/DESIGN.md §3.2).
+        x = jnp.moveaxis(x, axis + 1, x.ndim - 1)
+        x = jax.lax.dot_general(
+            x, s, dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return jnp.moveaxis(x, x.ndim - 1, axis + 1)
 
     def kernel(*refs):
         s_refs, x_ref, o_ref = refs[:-2], refs[-2], refs[-1]
@@ -122,14 +160,10 @@ def _make_fused_kernel(plan: ChainPlan):
                 continue
             s = s_refs[si][...]
             si += 1
-            # Contract axis ``axis+1`` with S by rotating it to the minor
-            # position — the dot_general then maps onto the MXU with the
-            # (block_l × leading-dims) batch as rows (docs/DESIGN.md §3.2).
-            x = jnp.moveaxis(x, axis + 1, x.ndim - 1)
-            x = jax.lax.dot_general(
-                x, s, dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            x = jnp.moveaxis(x, x.ndim - 1, axis + 1)
+            x = _contract(x, s, axis)
+        for axis, op in enumerate(epilogue):
+            if op == "cumsum":
+                x = _contract(x, _tril_ones(x.shape[axis + 1]), axis)
         y = x.reshape(bl, n_out)
         o_ref[...] = jnp.zeros((bl, w_out), y.dtype).at[:, :n_out].set(
             y).astype(o_ref.dtype)
@@ -140,9 +174,9 @@ def _make_fused_kernel(plan: ChainPlan):
 @lru_cache(maxsize=None)
 def _build_fused_call(signature: tuple, b_p: int, interpret: bool):
     """Compile (and cache, keyed on the chain signature) the fused pallas_call."""
-    in_dims, fshapes, block_l = signature
+    in_dims, fshapes, block_l, epilogue = signature
     plan = plan_chain([np.zeros(s) if s else None for s in fshapes],
-                      in_dims, batch=b_p, block_l=block_l)
+                      in_dims, batch=b_p, block_l=block_l, epilogue=epilogue)
     kernel = _make_fused_kernel(plan)
     n_factors = sum(1 for s in fshapes if s is not None)
     grid = (b_p // block_l,)
@@ -177,15 +211,38 @@ def _fallback_per_axis(s_facs: List[Optional[np.ndarray]], x: jnp.ndarray,
     return y.reshape(b, -1)
 
 
+def apply_epilogue(y, out_dims: Sequence[int],
+                   epilogue: Sequence[Optional[str]]) -> jnp.ndarray:
+    """Implicit-W epilogue: cumsum along marked axes of a (B, Π out_dims) stack.
+
+    Used by the non-fused (batched jnp / per-axis fallback) paths; the fused
+    kernel applies the same ops in-kernel (docs/DESIGN.md §8).  Pure — safe
+    to jit; callers on the host bump ``CHAIN_STATS.epilogue_axes`` themselves
+    so the counter reflects serving calls, not traces.
+    """
+    if not epilogue or all(op is None for op in epilogue):
+        return y
+    b = y.shape[0]
+    t = jnp.asarray(y).reshape((b,) + tuple(out_dims))
+    for axis, op in enumerate(epilogue):
+        if op == "cumsum":
+            t = jnp.cumsum(t, axis=axis + 1)
+    return t.reshape(b, -1)
+
+
 def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
                        interpret: Optional[bool] = None,
                        block_l: Optional[int] = None,
-                       vmem_budget: int = _VMEM_BUDGET) -> jnp.ndarray:
+                       vmem_budget: int = _VMEM_BUDGET,
+                       epilogue: Optional[Sequence[Optional[str]]] = None
+                       ) -> jnp.ndarray:
     """Apply ``⊗_i factors[i]`` to a stack ``x`` of shape (B, N) (or flat (N,)).
 
     One pad, one pallas_call, one slice per chain (stats.py instruments the
     contract).  Chains too large for VMEM fall back to the per-axis kernel.
-    Returns shape (B, n_out) — or flat (n_out,) if the input was flat.
+    ``epilogue`` marks axes for in-kernel implicit-W ops (``'cumsum'``), see
+    :func:`plan_chain`.  Returns shape (B, n_out) — or flat (n_out,) if the
+    input was flat.
     """
     interpret = _interpret_default() if interpret is None else interpret
     x = jnp.asarray(x, jnp.float32)
@@ -194,16 +251,23 @@ def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
         x = x[None, :]
     b = x.shape[0]
     plan = plan_chain(factors, dims, batch=b, block_l=block_l,
-                      vmem_budget=vmem_budget)
+                      vmem_budget=vmem_budget, epilogue=epilogue)
     if x.shape[1] != plan.n_in:
         raise ValueError(f"x width {x.shape[1]} != prod(dims) {plan.n_in}")
     s_facs = [_normalize_factor(f, n) for f, n in zip(factors, dims)]
     live = [s for s in s_facs if s is not None]
-    if not live:
+    has_epi = any(op is not None for op in plan.epilogue)
+    if not live and not has_epi:
         return x[0] if flat_in else x
+    if not live:
+        y = apply_epilogue(x, plan.out_dims, plan.epilogue)
+        CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
+        return y[0] if flat_in else y
     if not plan.fused_ok:
         CHAIN_STATS.fallback_chains += 1
         y = _fallback_per_axis(s_facs, x, plan.in_dims, interpret)
+        y = apply_epilogue(y, plan.out_dims, plan.epilogue)
+        CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
         return y[0] if flat_in else y
 
     b_p = _pad_to(b, plan.block_l)
@@ -214,6 +278,7 @@ def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
     out = call(*[jnp.asarray(s) for s in live], x_p)
     CHAIN_STATS.pallas_calls += 1
     CHAIN_STATS.fused_chains += 1
+    CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
     # ONE slice back to the true (B, n_out) extent.
     y = out[:b, :plan.n_out]
     CHAIN_STATS.slices += 1

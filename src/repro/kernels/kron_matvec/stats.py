@@ -19,12 +19,14 @@ class ChainStats:
     pallas_calls: int = 0    # pallas_call invocations
     fused_chains: int = 0    # chains served by the fused kernel
     fallback_chains: int = 0  # chains that fell back to the per-axis kernel
+    epilogue_axes: int = 0   # implicit-W (cumsum) epilogue axes applied
 
     def snapshot(self) -> dict:
         return dict(pads=self.pads, slices=self.slices,
                     pallas_calls=self.pallas_calls,
                     fused_chains=self.fused_chains,
-                    fallback_chains=self.fallback_chains)
+                    fallback_chains=self.fallback_chains,
+                    epilogue_axes=self.epilogue_axes)
 
 
 CHAIN_STATS = ChainStats()
@@ -36,6 +38,7 @@ def reset_chain_stats() -> None:
     CHAIN_STATS.pallas_calls = 0
     CHAIN_STATS.fused_chains = 0
     CHAIN_STATS.fallback_chains = 0
+    CHAIN_STATS.epilogue_axes = 0
 
 
 def chain_stats() -> dict:

@@ -1,0 +1,230 @@
+"""PlusEngine (signature-batched device Algs 5/6) vs the numpy oracles.
+
+Covers the generalized-signature batching, the staged [v; z] measurement
+chains, the merged T_i reconstruction with implicit prefix/range W epilogues,
+identity/prefix/range/custom bases, odd attribute sizes, and the empty
+clique (docs/DESIGN.md §8).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.core import Domain, MarginalWorkload
+from repro.core.mechanism import exact_marginals_from_x, noise_dtype
+from repro.core.plus import (PlusSchema, attr_basis, measure_plus_np,
+                             plus_signature_groups, reconstruct_plus,
+                             reconstruct_plus_merged, select_plus)
+from repro.engine.plus_engine import PlusEngine, expand_range_axis
+from repro.engine.sharded import sharded_marginals, sharded_measure
+from repro.kernels.kron_matvec.stats import chain_stats, reset_chain_stats
+
+# "total" is excluded: its basis is rank-0 (Sub has no rows) and select_plus
+# does not support degenerate bases — the custom basis below covers the
+# dense-W fold path instead.
+KINDS = ["identity", "prefix", "range", "custom"]
+
+
+class _ReplayRng:
+    """Feeds the engine's exact jax noise draws into the numpy oracle."""
+
+    def __init__(self, draws, order):
+        self._queue = [np.asarray(draws[c], np.float64) for c in order]
+
+    def standard_normal(self, n):
+        z = self._queue.pop(0)
+        assert z.shape == (n,), (z.shape, n)
+        return z
+
+
+def _mk_schema(dom, kinds, mode="hier"):
+    base_kinds = ["identity" if k == "custom" else k for k in kinds]
+    schema = PlusSchema.create(dom, base_kinds, strategy_mode=mode)
+    if "custom" in kinds:
+        # custom basic matrix: identity rows + the total row (1ᵀ is trivially
+        # in the row space); exercises the dense-W fold path of the engine.
+        bases = list(schema.bases)
+        for i, kind in enumerate(kinds):
+            if kind == "custom":
+                n = dom.attributes[i].size
+                bases[i] = attr_basis(np.vstack([np.eye(n), np.ones((1, n))]))
+        schema = PlusSchema(dom, tuple(bases))
+    return schema
+
+
+def _engine_vs_oracles(sizes, kinds, mode, rng, use_kernel,
+                       cliques=None, atol=1e-4):
+    dom = Domain.create(list(sizes))
+    if cliques is None:
+        cliques = tuple((i,) for i in range(len(sizes)))
+        if len(sizes) >= 2:
+            cliques += ((0, 1),)
+        if len(sizes) >= 3:
+            cliques += ((1, 2), (0, 1, 2))
+    wk = MarginalWorkload(dom, tuple(cliques))
+    schema = _mk_schema(dom, kinds, mode)
+    plan = select_plus(wk, schema, 1.0, "sov")
+    x = rng.integers(0, 7, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = PlusEngine(plan, use_kernel=use_kernel, precompile=False)
+    key = jax.random.PRNGKey(7)
+    meas = eng.measure(margs, key)
+    oracle = measure_plus_np(plan, margs,
+                             _ReplayRng(eng.noise_draws(key), plan.cliques))
+    for c in plan.cliques:
+        scale = max(np.abs(oracle[c].omega).max(), 1.0)
+        assert np.abs(meas[c].omega - oracle[c].omega).max() / scale < atol, c
+    tables = eng.reconstruct(meas)
+    for c in wk.cliques:
+        want = reconstruct_plus(plan, oracle, c)
+        scale = max(np.abs(want).max(), 1.0)
+        assert np.abs(tables[c] - want).max() / scale < atol, c
+    return plan, eng
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_plus_engine_mixed_workload_matches_oracles(use_kernel, rng):
+    """Acceptance: mixed marginal+range+prefix workload, ≤1e-4 (float32)."""
+    _engine_vs_oracles([4, 3, 5], ["prefix", "identity", "range"], "hier",
+                       rng, use_kernel,
+                       cliques=((0,), (0, 2), (1, 2), (0, 1, 2), ()))
+
+
+@pytest.mark.parametrize("kinds,mode", [
+    (["range", "range", "range"], "hier"),       # all-general: no stage B
+    (["identity", "identity", "identity"], "w"),  # all-identity: PR-1 chain
+    (["identity", "prefix", "custom"], "w"),
+    (["custom", "range", "identity"], "hier"),
+])
+def test_plus_engine_basis_mixes(kinds, mode, rng):
+    _engine_vs_oracles([3, 4, 2], kinds, mode, rng, use_kernel=True)
+
+
+def test_plus_engine_odd_sizes_and_empty_clique(rng):
+    plan, eng = _engine_vs_oracles(
+        [7, 2, 5], ["range", "identity", "prefix"], "hier", rng,
+        use_kernel=True, cliques=((), (0,), (2,), (0, 2), (0, 1)))
+    assert () in plan.cliques   # empty clique measured and reconstructible
+
+
+def test_merged_chain_oracle_exact_fp64(rng):
+    """Σ_{A'⊆A} U ω == (⊗ W_i T_i) Σ e_{A'} exactly, generalized bases."""
+    dom = Domain.create([4, 3, 5])
+    wk = MarginalWorkload(dom, ((0, 1, 2), (0, 2), (1,)))
+    schema = PlusSchema.create(dom, ["prefix", "identity", "range"],
+                               strategy_mode="hier")
+    plan = select_plus(wk, schema, 1.0, "sov")
+    margs = exact_marginals_from_x(
+        dom, plan.cliques,
+        rng.integers(0, 9, dom.universe_size()).astype(float))
+    meas = measure_plus_np(plan, margs, rng)
+    for c in wk.cliques:
+        want = reconstruct_plus(plan, meas, c)
+        got = reconstruct_plus_merged(plan, meas, c)
+        assert np.allclose(want, got, atol=1e-9), c
+
+
+def test_range_expansion_matches_dense_w(rng):
+    from repro.core.plus import w_range
+    for n in (2, 3, 6, 9):
+        x = rng.standard_normal((4, n))
+        p = np.cumsum(x, axis=1)
+        got = np.asarray(expand_range_axis(jax.numpy.asarray(p), 1, n))
+        want = x @ w_range(n).T
+        assert np.allclose(got, want, atol=1e-6), n
+
+
+def test_plus_engine_batches_by_generalized_signature(rng):
+    """Same sizes, different bases ⇒ different groups; equal bases batch."""
+    dom = Domain.create([4, 4, 4, 4])
+    schema = PlusSchema.create(dom, ["range", "range", "prefix", "prefix"],
+                               strategy_mode="hier")
+    cliques = [(0,), (1,), (2,), (3,), (0, 1), (2, 3), (0, 2)]
+    groups = plus_signature_groups(schema, cliques)
+    sizes = sorted(len(g) for g in groups.values())
+    # (0,)+(1,) batch, (2,)+(3,) batch, the pairs stay separate
+    assert sizes == [1, 1, 1, 2, 2]
+    # size-keyed grouping would have collapsed everything per arity
+    from repro.core.mechanism import signature_groups
+    assert len(signature_groups(dom, cliques)) == 2
+
+
+def test_plus_engine_serving_chain_counts(rng):
+    """Serving issues one fused chain per planned group stage, not per clique."""
+    dom = Domain.create([3, 3, 3])
+    wk = MarginalWorkload(dom, ((0, 1), (1, 2), (0, 2)))
+    schema = PlusSchema.create(dom, ["range"] * 3, strategy_mode="hier")
+    plan = select_plus(wk, schema, 1.0, "sov")
+    margs = {c: np.arange(dom.n_cells(c), dtype=float) for c in plan.cliques}
+    eng = PlusEngine(plan, use_kernel=True)
+    reset_chain_stats()
+    eng.release(margs, jax.random.PRNGKey(0))
+    st = chain_stats()
+    # measurement: all-general bases ⇒ stage A only, one chain per non-empty
+    # group (arity 1 and 2); reconstruction: one merged chain for the three
+    # same-signature pairs.
+    assert st["pallas_calls"] == 3
+    assert st["fallback_chains"] == 0
+    assert eng.stats.compile_warmups == len(eng.chain_plans()) > 0
+
+
+def test_plus_engine_precompile_covers_serving(rng):
+    plan, eng = _engine_vs_oracles([4, 3, 5],
+                                   ["prefix", "identity", "range"], "hier",
+                                   rng, use_kernel=True)
+    eng2 = PlusEngine(plan, use_kernel=True, precompile=True)
+    assert eng2.stats.compile_warmups == len(eng2.chain_plans()) > 0
+    assert eng2.stats.measure_signatures <= len(plan.cliques)
+    for row in eng2.chain_plans():
+        assert row["w_in"] % 128 == 0 and row["batch_padded"] % 8 == 0
+
+
+def test_sharded_measure_plus_plan_path(rng):
+    """sharded_measure accepts a PlusPlan and matches the engine transform."""
+    dom = Domain.create([3, 4, 2])
+    wk = MarginalWorkload(dom, ((0, 1), (1, 2)))
+    schema = PlusSchema.create(dom, ["prefix", "identity", "identity"],
+                               strategy_mode="w")
+    plan = select_plus(wk, schema, 1.0, "sov")
+    records = rng.integers(0, 2, size=(50, 3)).astype(np.int32)
+    key = jax.random.PRNGKey(4)
+    meas = sharded_measure(plan, jax.numpy.asarray(records), key)
+    margs = sharded_marginals(dom, plan.cliques, jax.numpy.asarray(records))
+    want = PlusEngine(plan, use_kernel=False,
+                      precompile=False).measure(margs, key)
+    for c in plan.cliques:
+        assert np.allclose(meas[c].omega, want[c].omega, atol=1e-5), c
+
+
+def test_sharded_measure_dtype_threading(rng):
+    """Noise/marginal dtype defaults to noise_dtype() and is overridable."""
+    from repro.core import select_sum_of_variances
+    dom = Domain.create([3, 4])
+    wk = MarginalWorkload(dom, ((0, 1),))
+    plan = select_sum_of_variances(wk, 5.0)
+    records = rng.integers(0, 3, size=(40, 2)).astype(np.int32)
+    rj = jax.numpy.asarray(records)
+    margs = sharded_marginals(dom, plan.cliques, rj)
+    assert all(m.dtype == noise_dtype() for m in margs.values())
+    m32 = sharded_marginals(dom, plan.cliques, rj, dtype=jax.numpy.float32)
+    assert all(m.dtype == jax.numpy.float32 for m in m32.values())
+    # default draw == the core loop's draw (same fold order, same dtype)
+    from repro.core.mechanism import measure
+    got = sharded_measure(plan, rj, jax.random.PRNGKey(1))
+    want = measure(plan, margs, jax.random.PRNGKey(1), batched=False)
+    for c in plan.cliques:
+        assert np.allclose(got[c].omega, want[c].omega, atol=1e-5), c
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.lists(st.integers(2, 6), min_size=1, max_size=3),
+       st.lists(st.integers(0, len(KINDS) - 1), min_size=3, max_size=3),
+       st.integers(0, 1))
+def test_plus_engine_property_random_bases(sizes, kind_ids, mode_id):
+    """Property: engine == oracles across random sizes/bases/strategies."""
+    kinds = [KINDS[k] for k in kind_ids[:len(sizes)]]
+    kinds += ["identity"] * (len(sizes) - len(kinds))
+    mode = ["w", "hier"][mode_id]
+    rng = np.random.default_rng(0)   # data rng; fixtures can't cross @given
+    _engine_vs_oracles(sizes, kinds, mode, rng, use_kernel=False)
