@@ -1,0 +1,119 @@
+"""Planner benchmark: the arrayized PlanTable IR vs the legacy dict path.
+
+Two configurations:
+
+* a legacy-feasible comparison domain (d=40 fast / d=60 full, all ≤3-way)
+  where both paths run and the speedup is gated in CI (BENCH_planner.json,
+  floor 3×) — SoV selection (closure + coefficients + Lemma-2 closed form)
+  and batched ``workload_variances`` vs the per-subset dict loop;
+* the paper's headline scale: 100 attributes, all ≤3-way (166 751 closure
+  cliques, ~1.3M incidence entries) — IR build, SoV selection, device
+  ``lax.scan`` max-variance ascent, batched variances and batched
+  cross-marginal covariances, each recorded in seconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.domain import Domain, all_kway, subsets
+from repro.core.plantable import PlanTable, plan_table
+from repro.core.residual import variance_coeff
+from repro.core.select import (legacy_maxvar_sigmas, legacy_sov_sigmas,
+                               select_max_variance, select_sum_of_variances)
+
+from .common import emit, timeit
+
+
+def _domain(d: int) -> Domain:
+    """Synth-style mixed domain: sizes cycle 2..10."""
+    return Domain.create([(i % 9) + 2 for i in range(d)])
+
+
+def _legacy_workload_variances(plan, wk):
+    sig = plan.sigmas
+    dom = wk.domain
+    return {c: sum(sig[s] * variance_coeff(dom, s, c) for s in subsets(c))
+            for c in wk.cliques}
+
+
+def run(fast: bool = True) -> None:
+    # ---------------- arrayized vs legacy (gated speedups) ----------------
+    d_cmp = 40 if fast else 60
+    dom = _domain(d_cmp)
+    wk = all_kway(dom, 3, include_lower=True)
+
+    t_leg_sov = timeit(lambda: legacy_sov_sigmas(wk, 1.0), repeats=3)
+
+    def arrayized_sov():
+        table = PlanTable.for_workload(wk)      # real build, no memo
+        return select_sum_of_variances(wk, 1.0, table=table)
+
+    t_arr_sov = timeit(arrayized_sov, repeats=3)
+    emit(f"planner_sov_d{d_cmp}", t_arr_sov,
+         f"speedup={t_leg_sov / t_arr_sov:.1f}x_vs_legacy",
+         speedup_vs_legacy=round(t_leg_sov / t_arr_sov, 2),
+         legacy_us=round(t_leg_sov, 1))
+
+    table = plan_table(wk)
+    plan = select_sum_of_variances(wk, 1.0, table=table)
+    t_leg_var = timeit(lambda: _legacy_workload_variances(plan, wk), repeats=3)
+    t_arr_var = timeit(lambda: plan.variances_array(), repeats=3)
+    emit(f"planner_variances_d{d_cmp}", t_arr_var,
+         f"speedup={t_leg_var / t_arr_var:.1f}x_vs_legacy",
+         speedup_vs_legacy=round(t_leg_var / t_arr_var, 2),
+         legacy_us=round(t_leg_var, 1))
+
+    iters = 150
+    t_leg_mv = timeit(lambda: legacy_maxvar_sigmas(wk, 1.0, iters=iters,
+                                                   tol=0.0), repeats=1)
+    t_arr_mv = timeit(lambda: select_max_variance(
+        wk, 1.0, iters=iters, tol=0.0, table=table), repeats=1, warmup=1)
+    emit(f"planner_maxvar_d{d_cmp}", t_arr_mv,
+         f"speedup={t_leg_mv / t_arr_mv:.1f}x_vs_legacy_{iters}it",
+         speedup_vs_legacy=round(t_leg_mv / t_arr_mv, 2),
+         legacy_us=round(t_leg_mv, 1))
+    # device lax.scan coverage (TPU path; CPU XLA scatter makes it slow here)
+    t_dev_mv = timeit(lambda: select_max_variance(
+        wk, 1.0, iters=iters, tol=0.0, table=table, backend="device",
+        chunk=50), repeats=1, warmup=1)
+    emit(f"planner_maxvar_scan_d{d_cmp}", t_dev_mv,
+         f"lax.scan_{iters}it_warm",
+         seconds=round(t_dev_mv / 1e6, 3))
+
+    # ---------------- 100-attribute headline scale ----------------
+    d = 100
+    dom100 = _domain(d)
+    wk100 = all_kway(dom100, 3, include_lower=True)
+
+    t_build = timeit(lambda: PlanTable.for_workload(wk100), repeats=1)
+    table100 = PlanTable.for_workload(wk100)
+    emit(f"planner_build_d{d}", t_build,
+         f"closure={table100.n}_nnz={table100.inc_vals.size}",
+         seconds=round(t_build / 1e6, 3), closure=table100.n,
+         nnz=int(table100.inc_vals.size))
+
+    t_sov = timeit(lambda: select_sum_of_variances(wk100, 1.0, table=table100),
+                   repeats=1)
+    plan100 = select_sum_of_variances(wk100, 1.0, table=table100)
+    emit(f"planner_sov_d{d}", t_sov, "closed_form",
+         seconds=round(t_sov / 1e6, 3))
+
+    mv_iters = 100
+    t_mv = timeit(lambda: select_max_variance(
+        wk100, 1.0, iters=mv_iters, tol=1e-6, table=table100), repeats=1)
+    emit(f"planner_maxvar_d{d}", t_mv,
+         f"auto_backend_{mv_iters}it",
+         seconds=round(t_mv / 1e6, 3), iters=mv_iters)
+
+    t_var = timeit(lambda: plan100.variances_array(), repeats=3)
+    emit(f"planner_variances_d{d}", t_var,
+         f"batched_{table100.m}_marginals",
+         seconds=round(t_var / 1e6, 3), marginals=table100.m)
+
+    rng = np.random.default_rng(0)
+    wcl = wk100.cliques
+    pairs = [(wcl[i], wcl[j]) for i, j in
+             rng.integers(0, len(wcl), size=(1000, 2))]
+    t_cov = timeit(lambda: plan100.workload_covariances(pairs), repeats=3)
+    emit(f"planner_covariances_d{d}", t_cov, "batched_1000_pairs",
+         seconds=round(t_cov / 1e6, 3), pairs=1000)

@@ -66,7 +66,10 @@ def main():
     ap.add_argument("--plus", action="store_true",
                     help="ResidualPlanner+ range-query pipeline (PlusEngine)")
     ap.add_argument("--objective", default="sum_of_variances",
-                    choices=["sum_of_variances", "max_variance"])
+                    choices=["sum_of_variances", "max_variance", "convex"])
+    ap.add_argument("--variances", action="store_true",
+                    help="batched per-marginal variance + covariance report "
+                         "from the PlanTable IR (one segment-sum each)")
     args = ap.parse_args()
     if args.plus:
         return main_plus()
@@ -80,6 +83,23 @@ def main():
     plan = select(wk, pcost_budget=1.0, objective=args.objective)
     print(f"selected {len(plan.cliques)} base mechanisms; "
           f"pcost={pcost_of_plan(plan):.6f} rmse={plan.rmse():.3f}")
+
+    if args.variances:
+        # Thm-4 machinery off the PlanTable IR: every workload marginal's
+        # variance in ONE segment-sum, cross-marginal covariances batched.
+        var = plan.variances_array()
+        order = np.argsort(var)
+        print(f"batched variances over {len(var)} marginals: "
+              f"min={var.min():.3f} median={np.median(var):.3f} "
+              f"max={var.max():.3f}")
+        for i in (*order[:2], *order[-2:]):
+            print(f"  Var[{wk.cliques[i]}] = {var[i]:.4f}")
+        twoway = [c for c in wk.cliques if len(c) == 2]
+        pairs = [(a, b) for a in twoway[:6] for b in twoway[:6]
+                 if set(a) & set(b) and a != b][:4]
+        covs = plan.workload_covariances(pairs)
+        for (a, b), cv in zip(pairs, covs):
+            print(f"  Cov[{a}, {b}] (aligned cells) = {cv:.4f}")
 
     # 2) MEASURE on synthetic records
     records = synthetic_records(dom, 100_000, seed=0)

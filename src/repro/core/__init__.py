@@ -4,6 +4,7 @@ from .domain import (Attribute, Clique, Domain, MarginalWorkload, all_kway,
 from .residual import (expand_marginal, expand_residual, marginal_factors,
                        p_coeff, residual_factors, sub_gram, sub_matrix,
                        sub_pinv, variance_coeff)
+from .plantable import BasePlan, PlanTable, SigmaView, plan_table, sov_closed_form
 from .select import (Plan, select, select_convex, select_max_variance,
                      select_sum_of_variances, select_utility_constrained)
 from .mechanism import (Measurement, exact_marginals_from_x, measure,

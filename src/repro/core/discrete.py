@@ -31,6 +31,7 @@ import numpy as np
 from .domain import Clique, Domain
 from .kron import kron_matvec_np
 from .mechanism import Measurement
+from .plantable import BasePlan
 from .residual import sub_matrix
 from .select import Plan
 
@@ -128,7 +129,7 @@ def _ypinv_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
             for i in clique]
 
 
-def measure_discrete(plan: Plan, marginals: Mapping[Clique, np.ndarray],
+def measure_discrete(plan: BasePlan, marginals: Mapping[Clique, np.ndarray],
                      rng: "random.Random", digits: int = 4,
                      _noise_override=None) -> Dict[Clique, DiscreteMeasurement]:
     """Algorithm 3 for every base mechanism in the plan.
@@ -136,12 +137,19 @@ def measure_discrete(plan: Plan, marginals: Mapping[Clique, np.ndarray],
     Outputs are drop-in replacements for the continuous measurements: same
     shapes, same unbiasedness, and (Thm 6) the same ρ-zCDP parameter as the
     continuous mechanism run at σ̄_A ≥ σ_A.
+
+    Consumes the unified plan protocol (``plan.domain`` / ``plan.cliques`` /
+    ``plan.sigma2``); the rotation into integer queries is specific to
+    identity bases, so RP+ plans (non-plain IR) are rejected.
     """
+    if not getattr(plan.table, "plain", True):
+        raise ValueError("measure_discrete requires a plain (identity-basis) "
+                         "plan; RP+ plans have no integer-query rotation")
     out: Dict[Clique, DiscreteMeasurement] = {}
     for clique in plan.cliques:
         dims = [plan.domain.attributes[i].size for i in clique]
         v = np.asarray(marginals[clique], dtype=np.float64).reshape(-1)
-        sigma_bar = rationalize_sigma(math.sqrt(plan.sigmas[clique]), digits)
+        sigma_bar = rationalize_sigma(math.sqrt(plan.sigma2(clique)), digits)
         n_prod = int(np.prod(dims)) if clique else 1
         gamma2 = sigma_bar ** 2 * n_prod ** 2
         if not clique:

@@ -115,6 +115,12 @@ class MarginalWorkload:
     def weight(self, clique: Clique) -> float:
         return float(self.weights.get(clique, 1.0))
 
+    def weight_array(self) -> "np.ndarray":
+        """Importance Imp_A per workload clique, in ``self.cliques`` order —
+        the row-weight vector of the arrayized planner IR."""
+        import numpy as np
+        return np.array([self.weight(c) for c in self.cliques])
+
     def closure(self) -> List[Clique]:
         return closure(self.cliques)
 

@@ -95,7 +95,7 @@ _noise_dtype = noise_dtype   # backward-compat alias
 
 def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
             key: jax.Array, use_kernel: bool = False,
-            batched: bool = True) -> Dict[Clique, Measurement]:
+            batched: bool = True, dtype=None) -> Dict[Clique, Measurement]:
     """Run every base mechanism in the plan (Algorithm 1, continuous Gaussian).
 
     ``marginals[A]`` must hold the exact marginal table for every A in the
@@ -109,14 +109,17 @@ def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
     chain per group (fused Pallas chain when ``use_kernel``, batched jnp
     otherwise) instead of launching one chain per clique.  ``batched=False``
     keeps the historical per-clique loop (oracle / benchmark baseline).
+
+    ``dtype`` governs the noise draws; ``None`` resolves to
+    :func:`noise_dtype` (float64 under jax x64).
     """
+    dtype = _noise_dtype() if dtype is None else dtype
     keys = jax.random.split(key, len(plan.cliques))
     if not batched:
         return _measure_loop(plan, marginals, dict(zip(plan.cliques, keys)),
-                             use_kernel)
+                             use_kernel, dtype)
 
     out: Dict[Clique, Measurement] = {}
-    dtype = _noise_dtype()
     pos = {c: i for i, c in enumerate(plan.cliques)}
     for dims, cliques in signature_groups(plan.domain, plan.cliques).items():
         m = int(np.prod(dims)) if dims else 1
@@ -150,10 +153,10 @@ def measure(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
 
 def _measure_loop(plan: Plan, marginals: Mapping[Clique, jnp.ndarray],
                   keymap: Mapping[Clique, jax.Array],
-                  use_kernel: bool) -> Dict[Clique, Measurement]:
+                  use_kernel: bool, dtype=None) -> Dict[Clique, Measurement]:
     """Historical per-clique device loop — one chain per clique (bench baseline)."""
     out: Dict[Clique, Measurement] = {}
-    dtype = _noise_dtype()
+    dtype = _noise_dtype() if dtype is None else dtype
     for clique in plan.cliques:
         dims = _clique_dims(plan.domain, clique)
         v = jnp.asarray(marginals[clique]).reshape(-1)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from .domain import Clique, Domain, MarginalWorkload, closure, subsets
 from .kron import kron_matvec, kron_matvec_np
 from .mechanism import Measurement
+from .plantable import BasePlan, PlanTable, sov_closed_form
 from .residual import sub_matrix, sub_pinv
 
 # ---------------------------------------------------------------------------
@@ -248,22 +249,22 @@ def cell_variances_plus(schema: PlusSchema, sigmas: Mapping[Clique, float],
     return out
 
 
-@dataclass
-class PlusPlan:
-    schema: PlusSchema
-    workload: MarginalWorkload
-    cliques: List[Clique]
-    sigmas: Dict[Clique, float]
-    objective: str
-    pcost: float
-    loss_value: float
+@dataclass(eq=False)
+class PlusPlan(BasePlan):
+    """A ResidualPlanner+ plan: the unified IR protocol plus the schema.
+
+    ``table`` carries the Thm-7/8 per-axis factors (β_i, ‖W Sub†Γ‖²_F,
+    ‖W1‖²/n²), so every SoV/variance query is the same segment-sum the plain
+    path uses; ``plan.sigmas[A]`` stays a thin dict view.
+    """
+
+    schema: PlusSchema = None
 
     def sov(self, clique: Clique) -> float:
-        return sum(self.sigmas[sub] * sov_coeff_plus(self.schema, sub, clique)
-                   for sub in subsets(clique))
+        return self.table.variance_of(self.sigma, clique)
 
     def rmse(self) -> float:
-        tot = sum(self.sov(c) for c in self.workload.cliques)
+        tot = float(self.variances_array().sum())
         cells = sum(self.schema.query_rows(c) for c in self.workload.cliques)
         return math.sqrt(tot / cells)
 
@@ -271,37 +272,52 @@ class PlusPlan:
         return max(float(cell_variances_plus(self.schema, self.sigmas, c).max())
                    for c in self.workload.cliques)
 
+    def engine(self, use_kernel=None, precompile: bool = True, dtype=None):
+        from repro.engine.plus_engine import PlusEngine
+        return PlusEngine(self, use_kernel=use_kernel,
+                          precompile=precompile, dtype=dtype)
+
+
+def plus_axis_vectors(schema: PlusSchema
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-attribute (β, ‖W Sub†Γ‖²_F, ‖W1‖²/n²) vectors for the IR (Thm 7/8)."""
+    beta = np.array([b.beta for b in schema.bases])
+    fn2 = np.array([b.fnorm2 for b in schema.bases])
+    wo2 = np.array([b.wones2 for b in schema.bases])
+    return beta, fn2, wo2
+
+
+def plan_table_plus(workload: MarginalWorkload, schema: PlusSchema) -> PlanTable:
+    """The RP+ PlanTable: same IR, Thm-7/8 per-axis coefficient vectors."""
+    beta, fn2, wo2 = plus_axis_vectors(schema)
+    return PlanTable.build(workload, axis_pcost=beta, axis_meas=fn2,
+                           axis_marg=wo2, axis_cross=None, plain=False)
+
 
 def select_plus(workload: MarginalWorkload, schema: PlusSchema,
                 pcost_budget: float = 1.0, objective: str = "sum_of_variances",
                 weights: Optional[Mapping[Clique, float]] = None,
-                steps: int = 3000, lr: float = 0.05) -> PlusPlan:
+                steps: int = 3000, lr: float = 0.05,
+                table: Optional[PlanTable] = None) -> PlusPlan:
     """Selection for RP+ workloads.  SoV is closed form (Lemma 2 applies verbatim
-    with generalized p_A, v_A); max_variance uses the scale-invariant solver on
-    the exact per-cell variance diagonals."""
-    cl = closure(workload.cliques)
-    index = {c: i for i, c in enumerate(cl)}
-    p = np.array([p_coeff_plus(schema, c) for c in cl])
-    v = np.zeros(len(cl))
-    for wc in workload.cliques:
-        imp = float((weights or {}).get(wc, workload.weight(wc)))
-        for sub in subsets(wc):
-            v[index[sub]] += imp * sov_coeff_plus(schema, sub, wc)
+    with generalized p_A, v_A, both straight off the IR); max_variance uses the
+    scale-invariant solver on the exact per-cell variance diagonals."""
+    table = plan_table_plus(workload, schema) if table is None else table
+    cl = table.cliques
+    index = table.index
+    p = table.p
+    if weights is None:
+        v = table.v
+    else:
+        w = table.weight_vector(weights, default_to_workload=True)
+        v = np.bincount(table.inc_cols,
+                        weights=w[table.inc_rows] * table.inc_vals,
+                        minlength=table.n)
 
     if objective in ("sum_of_variances", "sov", "rmse"):
-        pos = v > 0
-        n_zero = int((~pos).sum())
-        eps_share = 1e-9 * pcost_budget if n_zero else 0.0
-        c_eff = pcost_budget - eps_share * n_zero
-        T = float(np.sqrt(v[pos] * p[pos]).sum()) ** 2 / c_eff
-        sig = np.zeros(len(cl))
-        sig[pos] = np.sqrt(T * p[pos] / (c_eff * v[pos]))
-        if n_zero:
-            sig[~pos] = p[~pos] / eps_share
-        sigmas = {c_: float(s) for c_, s in zip(cl, sig)}
-        plan = PlusPlan(schema, workload, cl, sigmas, objective,
-                        pcost=float(np.sum(p / sig)), loss_value=float(np.dot(v, sig)))
-        return plan
+        sig = sov_closed_form(p, v, pcost_budget)
+        return PlusPlan(table, sig, objective, pcost=table.pcost(sig),
+                        loss_value=float(np.dot(v, sig)), schema=schema)
 
     if objective in ("max_variance", "maxvar"):
         # Per-cell variance rows: Var_cell = D u with D (total_cells x |closure|).
@@ -358,11 +374,12 @@ def select_plus(workload: MarginalWorkload, schema: PlusSchema,
 
         u = np.exp(np.asarray(run(theta0), dtype=np.float64))
         u *= float(np.sum(p / u)) / pcost_budget
-        sigmas = {c_: float(s) for c_, s in zip(cl, u)}
-        plan = PlusPlan(schema, workload, cl, sigmas, objective,
-                        pcost=float(np.sum(p / u)), loss_value=0.0)
-        plan.loss_value = plan.max_cell_variance()
-        return plan
+        # fp64 loss at the solution, set at construction (never patched after).
+        sig_map = dict(zip(cl, map(float, u)))
+        loss_value = max(float(cell_variances_plus(schema, sig_map, c).max())
+                         for c in workload.cliques)
+        return PlusPlan(table, u, objective, pcost=table.pcost(u),
+                        loss_value=loss_value, schema=schema)
 
     raise ValueError(objective)
 

@@ -208,3 +208,31 @@ def marginal_covariance_dense(plan: Plan, clique: Clique) -> np.ndarray:
                 facs.append(np.full((sz, sz), 1.0 / sz ** 2))
         cov += plan.sigmas[sub] * (kron_expand(facs) if facs else np.ones((1, 1)))
     return cov
+
+
+def cross_marginal_covariance_dense(plan: Plan, a: Clique, b: Clique
+                                    ) -> np.ndarray:
+    """Full cross-covariance matrix of reconstructed marginals A and B.
+
+    Only the measurements on shared subsets A' ⊆ A∩B correlate the two
+    reconstructions:
+
+        Cov(Q̂_A, Q̂_B) = Σ_{A'⊆A∩B} σ²_{A'} · U_{A←A'} H_{A'} H_{A'}ᵀ U_{B←A'}ᵀ
+
+    with H_{A'} = ⊗_{i∈A'} Sub_{n_i}.  Materializes n_cells(A) × n_cells(B) —
+    small cliques only; the fp64 oracle behind the IR's aligned-cell
+    ``cross_covariance`` (docs/DESIGN.md §9).
+    """
+    from .kron import kron_expand
+    from .residual import sub_matrix
+
+    dom = plan.domain
+    inter = tuple(sorted(set(a) & set(b)))
+    cov = np.zeros((dom.n_cells(a), dom.n_cells(b)))
+    for sub in subsets(inter):
+        ua = kron_expand(_u_factors(dom, a, sub)[0]) if a else np.ones((1, 1))
+        ub = kron_expand(_u_factors(dom, b, sub)[0]) if b else np.ones((1, 1))
+        h = kron_expand([sub_matrix(dom.attributes[i].size) for i in sub]) \
+            if sub else np.ones((1, 1))
+        cov += plan.sigmas[sub] * ua @ h @ h.T @ ub.T
+    return cov

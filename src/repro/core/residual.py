@@ -72,6 +72,22 @@ def variance_coeff(domain: Domain, sub_clique: Clique, clique: Clique) -> float:
     return out
 
 
+def axis_coeff_vectors(domain: Domain
+                       ) -> "tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]":
+    """Per-attribute coefficient vectors ``(pcost, meas, marg, cross)`` for the
+    arrayized planner IR (:mod:`repro.core.plantable`).
+
+    Thm 3/4 factor per axis: a clique's pcost coefficient is
+    ``Π_{i∈A} (n_i−1)/n_i``; the coefficient of σ²_{A'} in the per-cell
+    variance of the marginal on A is ``Π_{i∈A'} (n_i−1)/n_i ·
+    Π_{i∈A∖A'} 1/n_i²``; the aligned-cell cross-marginal covariance adds a
+    ``1/n_i`` factor for every axis in the symmetric difference A△B.
+    """
+    sizes = np.asarray(domain.sizes, dtype=np.float64)
+    frac = (sizes - 1.0) / sizes
+    return frac, frac, sizes ** -2.0, sizes ** -1.0
+
+
 def sigma_cov_factors(domain: Domain, clique: Clique) -> List[np.ndarray]:
     """Kronecker factors of Σ_A = ⊗_{i∈A} Sub_i Sub_iᵀ (1x1 [1] for empty clique)."""
     if not clique:

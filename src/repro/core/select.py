@@ -1,23 +1,33 @@
 """The selection phase: choose noise scales σ²_A for every A in closure(Wkload).
 
-Two optimizers, matching Section 4.4 / 6.1 of the paper:
+All three optimizers run against the arrayized PlanTable IR
+(:mod:`repro.core.plantable`, docs/DESIGN.md §9) — the closure, the Thm-3/4
+coefficient vectors and the workload↔closure incidence are flat arrays built
+once per workload, and every objective is segment-sums over them:
 
 * ``select_sum_of_variances`` — the closed form of Lemma 2 (no iterations);
-* ``select_convex``           — a JAX solver for any *regular*, positively
-  1-homogeneous loss of the per-marginal variances (covers the paper's
-  weighted-SoV and max-variance objectives).  The paper uses CVXPY/ECOS;
-  this container has neither, so we exploit the scale-invariance of
-  ``pcost(σ²)·L(Var(σ²))`` (pcost is (-1)-homogeneous, L is 1-homogeneous)
-  to solve the *unconstrained* problem ``min_u pcost(u)·L(u)`` in log-space
-  with Adam + temperature-annealed smooth-max, then rescale so the privacy
-  constraint is tight.  Validated against Lemma 2 closed forms and the SVD
-  bound in tests.
+* ``select_max_variance``    — exact max-variance via the concave dual; the
+  exponentiated-gradient ascent runs as a ``lax.scan`` over
+  ``jax.ops.segment_sum`` on device (chunked, with fp64 host checkpoints
+  certifying the primal–dual gap), replacing the historical 4000-iteration
+  ``np.add.at`` host loop;
+* ``select_convex``          — a JAX solver for any *regular*, positively
+  1-homogeneous loss of the per-marginal variances, including user-supplied
+  callables.  The paper uses CVXPY/ECOS; this container has neither, so we
+  exploit the scale-invariance of ``pcost(σ²)·L(Var(σ²))`` to solve the
+  unconstrained product objective in log-space with Adam, then rescale so
+  the privacy constraint is tight.
+
+The legacy dict/itertools coefficient path survives as ``_coefficients`` /
+``legacy_*_sigmas`` — the fp64 reference the property tests and the
+planner-bench speedup gate compare against.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -25,48 +35,59 @@ import jax
 import jax.numpy as jnp
 
 from .domain import Clique, Domain, MarginalWorkload, closure, subsets
+from .plantable import (BasePlan, PlanTable, plan_table, sov_closed_form)
 from .residual import p_coeff, variance_coeff
 
+LossSpec = Union[str, Callable]
 
-@dataclass
-class Plan:
-    """Output of the selection phase: which base mechanisms to run, at what scale."""
 
-    domain: Domain
-    workload: MarginalWorkload
-    cliques: List[Clique]                    # closure(Wkload), sorted
-    sigmas: Dict[Clique, float]              # σ²_A for each A in closure
-    objective: str
-    pcost: float
-    loss_value: float
+@dataclass(eq=False)
+class Plan(BasePlan):
+    """Output of the selection phase: which base mechanisms to run, at what scale.
 
-    def sigma2(self, clique: Clique) -> float:
-        return self.sigmas[clique]
+    Carried by the PlanTable IR; ``plan.sigmas[A]`` and the legacy accessors
+    are thin views over the σ² array (docs/DESIGN.md §9).
+    """
 
     def marginal_variance(self, clique: Clique) -> float:
         """Per-cell variance of the reconstructed marginal on ``clique`` (Thm 4)."""
-        v = 0.0
-        for sub in subsets(clique):
-            v += self.sigmas[sub] * variance_coeff(self.domain, sub, clique)
-        return v
-
-    def workload_variances(self) -> Dict[Clique, float]:
-        return {c: self.marginal_variance(c) for c in self.workload.cliques}
+        return self.table.variance_of(self.sigma, clique)
 
     def total_variance(self) -> float:
         """Sum over workload marginals of (#cells × per-cell variance)."""
-        return sum(self.domain.n_cells(c) * v for c, v in self.workload_variances().items())
+        cells = np.array([self.domain.n_cells(c) for c in self.workload.cliques])
+        return float(np.dot(cells, self.variances_array()))
 
     def rmse(self) -> float:
         """Root mean squared error over all workload cells (paper's RMSE metric)."""
         return math.sqrt(self.total_variance() / self.workload.total_cells())
 
     def max_variance(self, weights: Optional[Mapping[Clique, float]] = None) -> float:
-        wv = self.workload_variances()
+        wv = self.variances_array()
         if weights is None:
-            return max(wv.values())
-        return max(v / float(weights.get(c, 1.0)) for c, v in wv.items())
+            return float(wv.max())
+        w = self.table.weight_vector(weights, default_to_workload=False)
+        return float((wv / w).max())
 
+    def marginal_covariance(self, a: Clique, b: Clique) -> float:
+        """Aligned-cell covariance between reconstructed marginals A and B."""
+        return self.table.cross_covariance(self.sigma, a, b)
+
+    def workload_covariances(self, pairs: Sequence[Tuple[Clique, Clique]]
+                             ) -> np.ndarray:
+        """Batched cross-marginal covariances: one segment-sum for all pairs."""
+        return self.table.cross_covariances(self.sigma, pairs)
+
+    def engine(self, use_kernel=None, precompile: bool = True, dtype=None):
+        from repro.engine.engine import MarginalEngine
+        return MarginalEngine(self, use_kernel=use_kernel,
+                              precompile=precompile, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Legacy dict/itertools coefficient path (fp64 reference; property tests and
+# the planner bench compare the IR against these)
+# ---------------------------------------------------------------------------
 
 def _coefficients(workload: MarginalWorkload,
                   weights: Optional[Mapping[Clique, float]] = None
@@ -84,33 +105,6 @@ def _coefficients(workload: MarginalWorkload,
     return cl, p, v
 
 
-def select_sum_of_variances(workload: MarginalWorkload, pcost_budget: float = 1.0,
-                            weights: Optional[Mapping[Clique, float]] = None) -> Plan:
-    """Closed-form optimum for weighted sum of per-cell variances (Lemma 2).
-
-    Cliques with v_A == 0 (needed for reconstruction completeness but receiving
-    zero objective weight) are handled by the standard limit argument: they get
-    vanishing budget; we give them a tiny share so reconstruction stays unbiased.
-    """
-    cl, p, v = _coefficients(workload, weights)
-    c = float(pcost_budget)
-    pos = v > 0
-    # Reserve a sliver of budget for zero-weight cliques so every base mechanism runs.
-    n_zero = int((~pos).sum())
-    eps_share = 1e-9 * c if n_zero else 0.0
-    c_eff = c - eps_share * n_zero
-    sq = np.sqrt(v[pos] * p[pos])
-    T = float(sq.sum()) ** 2 / c_eff
-    sig = np.zeros(len(cl))
-    sig[pos] = np.sqrt(T * p[pos] / (c_eff * v[pos]))
-    if n_zero:
-        sig[~pos] = p[~pos] / eps_share  # pcost share eps_share each
-    sigmas = {c_: float(s) for c_, s in zip(cl, sig)}
-    plan = Plan(workload.domain, workload, cl, sigmas, "sum_of_variances",
-                pcost=float(np.sum(p / sig)), loss_value=float(np.dot(v, sig)))
-    return plan
-
-
 def _variance_matrix(workload: MarginalWorkload, cl: List[Clique]
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """COO (rows → workload idx, cols → closure idx, coef) for Var_A(σ²) (Thm 4)."""
@@ -125,31 +119,259 @@ def _variance_matrix(workload: MarginalWorkload, cl: List[Clique]
     return np.array(rows, np.int32), np.array(cols, np.int32), np.array(vals)
 
 
+def legacy_sov_sigmas(workload: MarginalWorkload, pcost_budget: float = 1.0,
+                      weights: Optional[Mapping[Clique, float]] = None
+                      ) -> Dict[Clique, float]:
+    """Lemma-2 closed form over the dict/itertools coefficients (reference)."""
+    cl, p, v = _coefficients(workload, weights)
+    sig = sov_closed_form(p, v, pcost_budget)
+    return dict(zip(cl, map(float, sig)))
+
+
+def legacy_maxvar_sigmas(workload: MarginalWorkload, pcost_budget: float = 1.0,
+                         weights: Optional[Mapping[Clique, float]] = None,
+                         iters: int = 4000, tol: float = 1e-9
+                         ) -> Tuple[Dict[Clique, float], float]:
+    """Historical host-loop dual ascent (``np.add.at`` per iteration)."""
+    dom = workload.domain
+    cl = closure(workload.cliques)
+    p = np.array([p_coeff(dom, c) for c in cl])
+    m = len(workload.cliques)
+    cw = np.array([float((weights or {}).get(c, workload.weight(c)))
+                   for c in workload.cliques])
+    rows, cols, vals = _variance_matrix(workload, cl)
+    c = float(pcost_budget)
+    mu = np.full(m, 1.0 / m)
+    best = None
+    for t in range(iters):
+        v = np.zeros(len(cl))
+        np.add.at(v, cols, vals * (mu / cw)[rows])
+        sq = np.sqrt(np.maximum(v, 0.0) * p)
+        T = sq.sum() ** 2 / c
+        with np.errstate(divide="ignore"):
+            u = np.sqrt(T * p / (c * np.maximum(v, 1e-300)))
+        var = np.zeros(m)
+        np.add.at(var, rows, vals * u[cols])
+        var = var / cw
+        primal = float(var.max())
+        gap = primal - T
+        if best is None or primal < best[0]:
+            best = (primal, u.copy())
+        if gap <= tol * max(primal, 1e-300):
+            break
+        eta = 2.0 * math.log(max(m, 2)) / (primal * math.sqrt(t + 1.0))
+        mu = mu * np.exp(eta * (var - primal))
+        mu = np.maximum(mu, 1e-300)
+        mu /= mu.sum()
+    primal, u = best
+    return dict(zip(cl, map(float, u))), primal
+
+
+# ---------------------------------------------------------------------------
+# SoV: Lemma 2 closed form on the IR
+# ---------------------------------------------------------------------------
+
+def select_sum_of_variances(workload: MarginalWorkload, pcost_budget: float = 1.0,
+                            weights: Optional[Mapping[Clique, float]] = None,
+                            table: Optional[PlanTable] = None) -> Plan:
+    """Closed-form optimum for weighted sum of per-cell variances (Lemma 2).
+
+    Cliques with v_A == 0 (needed for reconstruction completeness but receiving
+    zero objective weight) get a vanishing budget sliver, computed overflow-safe
+    (see :func:`repro.core.plantable.sov_closed_form`).
+    """
+    table = plan_table(workload) if table is None else table
+    v = table.sov_coeffs(weights)
+    sig = sov_closed_form(table.p, v, pcost_budget)
+    return Plan(table, sig, "sum_of_variances",
+                pcost=table.pcost(sig), loss_value=float(np.dot(v, sig)))
+
+
+# ---------------------------------------------------------------------------
+# Max-variance: dual ascent as a device lax.scan over segment-sums
+# ---------------------------------------------------------------------------
+
+def _maxvar_eval_fp64(mu, p, rows, cols, vals, cw, c, n, m):
+    """Closed-form (primal σ², primal value, dual value) at dual point μ."""
+    mu = mu / mu.sum()
+    v = np.bincount(cols, weights=vals * (mu / cw)[rows], minlength=n)
+    sq = np.sqrt(np.maximum(v, 0.0) * p)
+    T = sq.sum() ** 2 / c
+    with np.errstate(divide="ignore"):
+        u = np.sqrt(T * p / (c * np.maximum(v, 1e-300)))
+    var = np.bincount(rows, weights=vals * u[cols], minlength=m) / cw
+    return float(var.max()), u, float(T)
+
+
+def _maxvar_numpy(p, rows, cols, vals, cw, c, iters, tol, n, m):
+    """Arrayized host loop: two bincount segment-sums per iteration."""
+    mu = np.full(m, 1.0 / m)
+    best_primal, best_u, dual_best = math.inf, None, -math.inf
+    logm = 2.0 * math.log(max(m, 2))
+    for t in range(iters):
+        v = np.bincount(cols, weights=vals * (mu / cw)[rows], minlength=n)
+        sq = np.sqrt(np.maximum(v, 0.0) * p)
+        T = sq.sum() ** 2 / c
+        with np.errstate(divide="ignore"):
+            u = np.sqrt(T * p / (c * np.maximum(v, 1e-300)))
+        var = np.bincount(rows, weights=vals * u[cols], minlength=m) / cw
+        primal = float(var.max())
+        dual_best = max(dual_best, float(T))
+        if primal < best_primal:
+            best_primal, best_u = primal, u
+        if best_primal - dual_best <= tol * max(best_primal, 1e-300):
+            break
+        eta = logm / (primal * math.sqrt(t + 1.0))
+        mu = mu * np.exp(eta * (var - primal))
+        mu = np.maximum(mu, 1e-300)
+        mu /= mu.sum()
+    return best_u, best_primal
+
+
+@partial(jax.jit, static_argnames=("n", "m", "chunk"))
+def _maxvar_run_chunk(mu, bp, bmu, t0, p_j, rows_j, cols_j, vals_j, icw,
+                      cc, tiny, logm, *, n, m, chunk):
+    """``chunk`` exp-gradient iterations as one ``lax.scan`` on device.
+
+    Module-level and jitted on (shapes, n, m, chunk) only, so repeated
+    selections over same-shaped IRs reuse the compilation.
+    """
+    dt = mu.dtype
+
+    def step(carry, t):
+        mu, bp, bmu = carry
+        v = jax.ops.segment_sum(vals_j * (mu * icw)[rows_j], cols_j,
+                                num_segments=n)
+        sq = jnp.sqrt(jnp.maximum(v, 0.0) * p_j)
+        T = sq.sum() ** 2 / cc
+        u = jnp.sqrt(T * p_j / (cc * jnp.maximum(v, tiny)))
+        var = jax.ops.segment_sum(vals_j * u[cols_j], rows_j,
+                                  num_segments=m) * icw
+        primal = var.max()
+        better = primal < bp
+        bp2 = jnp.where(better, primal, bp)
+        bmu2 = jnp.where(better, mu, bmu)
+        eta = logm / (primal * jnp.sqrt(t + 1.0))
+        mu2 = mu * jnp.exp(eta * (var - primal))
+        mu2 = jnp.maximum(mu2, tiny)
+        return (mu2 / mu2.sum(), bp2, bmu2), None
+
+    carry, _ = jax.lax.scan(step, (mu, bp, bmu),
+                            jnp.arange(chunk, dtype=dt) + t0)
+    return carry
+
+
+def _maxvar_device(table, cw, c, iters, tol, chunk):
+    """Chunked ``lax.scan`` dual ascent: every iteration is two
+    ``jax.ops.segment_sum`` contractions over the IR incidence; fp64 host
+    checkpoints at chunk boundaries track the best primal and certify the
+    primal–dual gap."""
+    n, m = table.n, table.m
+    p, rows, cols, vals = table.p, table.inc_rows, table.inc_cols, table.inc_vals
+    p_j, rows_j, cols_j, vals_j = table.device_arrays()
+    dt = p_j.dtype
+    icw = jnp.asarray(1.0 / cw, dt)
+    tiny = float(np.finfo(np.dtype(dt.name)).tiny)
+    logm = 2.0 * math.log(max(m, 2))
+    cc = float(c)
+
+    mu_j = jnp.full(m, 1.0 / m, dt)
+    bp_j = jnp.asarray(np.inf, dt)
+    bmu_j = mu_j
+    best_primal, best_u, dual_best = math.inf, None, -math.inf
+    t0 = 0
+    while t0 < iters:
+        # Exact iteration count: the tail chunk shrinks instead of overrunning
+        # (at most one extra compilation per distinct remainder size).
+        k = min(chunk, iters - t0)
+        mu_j, bp_j, bmu_j = _maxvar_run_chunk(
+            mu_j, bp_j, bmu_j, float(t0), p_j, rows_j, cols_j, vals_j, icw,
+            cc, tiny, logm, n=n, m=m, chunk=k)
+        t0 += k
+        for cand in (np.asarray(mu_j, np.float64),
+                     np.asarray(bmu_j, np.float64)):
+            primal, u, T = _maxvar_eval_fp64(cand, p, rows, cols, vals,
+                                             cw, cc, n, m)
+            dual_best = max(dual_best, T)
+            if primal < best_primal:
+                best_primal, best_u = primal, u
+        if best_primal - dual_best <= tol * max(best_primal, 1e-300):
+            break
+    return best_u, best_primal
+
+
+def select_max_variance(workload: MarginalWorkload, pcost_budget: float = 1.0,
+                        weights: Optional[Mapping[Clique, float]] = None,
+                        iters: int = 4000, tol: float = 1e-9,
+                        table: Optional[PlanTable] = None,
+                        backend: str = "auto", chunk: int = 250) -> Plan:
+    """Exact max-variance selection via the concave dual (beyond-paper solver).
+
+    min_σ max_A Var_A/c_A  s.t. pcost ≤ c  has Lagrangian dual
+        max_{μ ∈ Δ} g(μ),   g(μ) = (Σ_{A'} sqrt(p_{A'} v_{A'}(μ)))² / c
+    where v(μ) are the Lemma-2 SoV coefficients under workload weights μ/c_A:
+    the inner minimization *is* the closed form of Lemma 2.  Exponentiated-
+    gradient ascent on μ (∇g = per-marginal variances of the closed-form
+    solution) runs as segment-sums over the IR incidence — a chunked
+    ``lax.scan`` over ``jax.ops.segment_sum`` on accelerators, a vectorized
+    ``np.bincount`` loop on CPU (XLA's CPU scatter is ~100× slower than
+    bincount, same story as interpret-mode Pallas; ``backend='auto'``
+    resolves per jax backend like the kernel paths do) — and optimality is
+    certified by the primal–dual gap.
+    """
+    table = plan_table(workload) if table is None else table
+    cw = table.weight_vector(weights, default_to_workload=True)
+    c = float(pcost_budget)
+    if backend == "auto":
+        backend = "device" if (jax.default_backend() != "cpu"
+                               and table.inc_vals.size >= 20_000) else "numpy"
+    if backend == "device":
+        u, primal = _maxvar_device(table, cw, c, iters, tol, chunk)
+    elif backend == "numpy":
+        u, primal = _maxvar_numpy(table.p, table.inc_rows, table.inc_cols,
+                                  table.inc_vals, cw, c, iters, tol,
+                                  table.n, table.m)
+    else:
+        raise ValueError(backend)
+    return Plan(table, u, "max_variance",
+                pcost=table.pcost(u), loss_value=primal)
+
+
+# ---------------------------------------------------------------------------
+# Generic 1-homogeneous convex losses (built-in or user-supplied callables)
+# ---------------------------------------------------------------------------
+
 def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
-                  loss: str = "max_variance",
+                  loss: LossSpec = "max_variance",
                   weights: Optional[Mapping[Clique, float]] = None,
-                  steps: int = 3000, lr: float = 0.05, seed: int = 0) -> Plan:
+                  steps: int = 3000, lr: float = 0.05, seed: int = 0,
+                  table: Optional[PlanTable] = None) -> Plan:
     """Solve privacy-constrained selection for a regular 1-homogeneous loss.
 
-    loss: 'max_variance' (max_A Var_A / c_A)  or 'sum_of_variances' (sanity path).
+    ``loss`` is ``'max_variance'`` (max_A Var_A / c_A), ``'sum_of_variances'``
+    (sanity path), or any positively 1-homogeneous jnp-traceable callable
+    ``L(var)`` of the weight-normalized per-marginal variance vector
+    ``var = Var(σ²)/c`` (shape (m,), strictly positive).  The final
+    ``loss_value`` is computed before the plan is constructed — in fp64 for
+    the built-in losses, in the callable's own precision otherwise.
     """
-    cl, p, v_lin = _coefficients(workload, weights)
-    rows, cols, vals = _variance_matrix(workload, cl)
-    n, m = len(cl), len(workload.cliques)
-    w = np.array([float((weights or {}).get(c, workload.weight(c))) for c in workload.cliques])
+    table = plan_table(workload) if table is None else table
+    v_lin = table.sov_coeffs(weights)       # historical default-1.0 weighting
+    w = table.weight_vector(weights, default_to_workload=True)
+    m = table.m
 
-    p_j = jnp.asarray(p)
-    rows_j, cols_j, vals_j = jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals)
-    w_j = jnp.asarray(w)
-    v_lin_j = jnp.asarray(v_lin)
+    p_j, rows_j, cols_j, vals_j = table.device_arrays()
+    w_j = jnp.asarray(w, p_j.dtype)
+    v_lin_j = jnp.asarray(v_lin, p_j.dtype)
 
     def variances(u):
-        contrib = vals_j * u[cols_j]
-        return jax.ops.segment_sum(contrib, rows_j, num_segments=m)
+        return jax.ops.segment_sum(vals_j * u[cols_j], rows_j, num_segments=m)
 
     def loss_fn(u, tau):
         var = variances(u) / w_j
-        if loss == "max_variance":
+        if callable(loss):
+            L = loss(var)
+        elif loss == "max_variance":
             L = tau * jax.scipy.special.logsumexp(var / tau)
         elif loss == "sum_of_variances":
             L = jnp.dot(v_lin_j, u)
@@ -159,12 +381,9 @@ def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
         return jnp.log(P) + jnp.log(L)  # scale-invariant product objective
 
     # Init from the SoV closed form (good warm start).
-    warm = select_sum_of_variances(workload, pcost_budget, weights)
-    theta0 = jnp.log(jnp.asarray([max(warm.sigmas[c], 1e-12) for c in cl]))
-
-    tau_scale = float(np.mean([warm.marginal_variance(c) /
-                               float((weights or {}).get(c, workload.weight(c)))
-                               for c in workload.cliques]))
+    warm = select_sum_of_variances(workload, pcost_budget, weights, table=table)
+    theta0 = jnp.log(jnp.asarray(np.maximum(warm.sigma, 1e-12), p_j.dtype))
+    tau_scale = float(np.mean(table.variances(warm.sigma) / w))
 
     @jax.jit
     def run(theta0):
@@ -187,78 +406,43 @@ def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
     theta = np.asarray(run(theta0), dtype=np.float64)
     u = np.exp(theta)
     # Rescale so pcost is exactly the budget (tight at the optimum).
-    scale = float(np.sum(p / u)) / float(pcost_budget)
-    u = u * scale
-    sigmas = {c_: float(s) for c_, s in zip(cl, u)}
-    plan = Plan(workload.domain, workload, cl, sigmas, loss,
-                pcost=float(np.sum(p / u)), loss_value=0.0)
-    if loss == "max_variance":
-        plan.loss_value = plan.max_variance(weights)
+    u = u * (table.pcost(u) / float(pcost_budget))
+    # fp64 loss at the solution — set at construction, never patched after.
+    var64 = table.variances(u) / w
+    if callable(loss):
+        loss_value = float(np.asarray(loss(var64)))
+        objective = getattr(loss, "__name__", "convex")
+    elif loss == "max_variance":
+        loss_value = float(var64.max())
+        objective = loss
     else:
-        plan.loss_value = float(np.dot(v_lin, u))
-    return plan
-
-
-def select_max_variance(workload: MarginalWorkload, pcost_budget: float = 1.0,
-                        weights: Optional[Mapping[Clique, float]] = None,
-                        iters: int = 4000, tol: float = 1e-9) -> Plan:
-    """Exact max-variance selection via the concave dual (beyond-paper solver).
-
-    min_σ max_A Var_A/c_A  s.t. pcost ≤ c  has Lagrangian dual
-        max_{μ ∈ Δ} g(μ),   g(μ) = (Σ_{A'} sqrt(p_{A'} v_{A'}(μ)))² / c
-    where v(μ) are the Lemma-2 SoV coefficients under workload weights μ/c_A:
-    the inner minimization *is* the closed form of Lemma 2.  We run
-    exponentiated-gradient ascent on μ (∇g = per-marginal variances of the
-    closed-form solution) and certify optimality by the primal–dual gap.
-    """
-    dom = workload.domain
-    cl = closure(workload.cliques)
-    index = {c: i for i, c in enumerate(cl)}
-    p = np.array([p_coeff(dom, c) for c in cl])
-    m = len(workload.cliques)
-    cw = np.array([float((weights or {}).get(c, workload.weight(c)))
-                   for c in workload.cliques])
-    rows, cols, vals = _variance_matrix(workload, cl)
-    c = float(pcost_budget)
-
-    mu = np.full(m, 1.0 / m)
-    best = None
-    for t in range(iters):
-        # v(μ): closure-space coefficients under weights μ_A / c_A
-        v = np.zeros(len(cl))
-        np.add.at(v, cols, vals * (mu / cw)[rows])
-        sq = np.sqrt(np.maximum(v, 0.0) * p)
-        T = sq.sum() ** 2 / c                    # dual value g(μ)
-        with np.errstate(divide="ignore"):
-            u = np.sqrt(T * p / (c * np.maximum(v, 1e-300)))
-        var = np.zeros(m)
-        np.add.at(var, rows, vals * u[cols])
-        var = var / cw                           # ∇g(μ)
-        primal = float(var.max())
-        gap = primal - T
-        if best is None or primal < best[0]:
-            best = (primal, u.copy(), T)
-        if gap <= tol * max(primal, 1e-300):
-            break
-        eta = 2.0 * math.log(max(m, 2)) / (primal * math.sqrt(t + 1.0))
-        mu = mu * np.exp(eta * (var - primal))
-        mu = np.maximum(mu, 1e-300)
-        mu /= mu.sum()
-
-    primal, u, T = best
-    sigmas = {c_: float(s) for c_, s in zip(cl, u)}
-    plan = Plan(dom, workload, cl, sigmas, "max_variance",
-                pcost=float(np.sum(p / u)), loss_value=primal)
-    return plan
+        loss_value = float(np.dot(v_lin, u))
+        objective = loss
+    return Plan(table, u, objective, pcost=table.pcost(u),
+                loss_value=loss_value)
 
 
 def select(workload: MarginalWorkload, pcost_budget: float = 1.0,
            objective: str = "sum_of_variances",
-           weights: Optional[Mapping[Clique, float]] = None, **kw) -> Plan:
+           weights: Optional[Mapping[Clique, float]] = None,
+           loss: Optional[LossSpec] = None, **kw) -> Plan:
+    """Dispatch on objective: sov | maxvar | convex (user losses welcome).
+
+    ``objective='convex'`` routes to :func:`select_convex`; pass the loss via
+    ``loss=`` (a name or a positively 1-homogeneous callable).  A callable
+    ``objective`` is shorthand for the same thing.
+    """
+    if callable(objective):
+        return select_convex(workload, pcost_budget, loss=objective,
+                             weights=weights, **kw)
     if objective in ("sum_of_variances", "sov", "rmse"):
-        return select_sum_of_variances(workload, pcost_budget, weights)
+        return select_sum_of_variances(workload, pcost_budget, weights, **kw)
     if objective in ("max_variance", "maxvar"):
         return select_max_variance(workload, pcost_budget, weights, **kw)
+    if objective == "convex":
+        return select_convex(workload, pcost_budget,
+                             loss="max_variance" if loss is None else loss,
+                             weights=weights, **kw)
     raise ValueError(objective)
 
 
@@ -278,13 +462,11 @@ def select_utility_constrained(workload: MarginalWorkload, loss_budget: float,
     base = select(workload, pcost_budget=1.0, objective=objective,
                   weights=weights, **kw)
     if objective in ("sum_of_variances", "sov", "rmse"):
-        l1 = sum(float((weights or {}).get(c, workload.weight(c)))
-                 * base.marginal_variance(c) for c in workload.cliques)
+        w = base.table.weight_vector(weights, default_to_workload=True)
+        l1 = float(np.dot(w, base.variances_array()))
     else:
         l1 = base.max_variance(weights)
     scale = float(loss_budget) / l1          # loss is 1-homogeneous in σ²
-    sigmas = {c: s * scale for c, s in base.sigmas.items()}
-    plan = Plan(workload.domain, base.workload, base.cliques, sigmas,
+    return Plan(base.table, base.sigma * scale,
                 base.objective + "_utility_constrained",
                 pcost=base.pcost / scale, loss_value=float(loss_budget))
-    return plan

@@ -95,14 +95,18 @@ class MarginalEngine(ChainRegistry):
                  only add Python overhead.
     precompile:  trace/compile every chain at construction so serving calls
                  are cache hits (set False for tiny one-shot jobs).
+    dtype:       noise-draw dtype; ``None`` resolves to
+                 :func:`repro.core.mechanism.noise_dtype`.
     """
 
     def __init__(self, plan: Plan, use_kernel: Optional[bool] = None,
-                 precompile: bool = True):
+                 precompile: bool = True, dtype=None):
+        from repro.core.mechanism import noise_dtype
         from repro.kernels.kron_matvec._layout import interpret_default
         self.plan = plan
         self.use_kernel = (not interpret_default()) if use_kernel is None \
             else use_kernel
+        self.dtype = noise_dtype() if dtype is None else dtype
         self.stats = EngineStats()
         self._measure_groups = signature_groups(plan.domain, plan.cliques)
         self._reconstruct_groups = signature_groups(plan.domain,
@@ -137,7 +141,7 @@ class MarginalEngine(ChainRegistry):
         """Algorithm 1 over the whole closure: one fused chain per signature."""
         self.stats.measure_calls += 1
         return measure(self.plan, marginals, key, use_kernel=self.use_kernel,
-                       batched=True)
+                       batched=True, dtype=self.dtype)
 
     def reconstruct(self, measurements: Mapping[Clique, Measurement],
                     cliques: Optional[Sequence[Clique]] = None

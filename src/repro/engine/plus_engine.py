@@ -83,8 +83,11 @@ class PlusEngine(ChainRegistry):
 
     Parameters
     ----------
-    plan:        ``core.plus.select_plus`` output (σ²_A per closure clique,
-                 plus the per-attribute generalized bases).
+    plan:        ``core.plus.select_plus`` output — a
+                 :class:`~repro.core.plantable.BasePlan` carrying the RP+
+                 PlanTable IR plus the per-attribute generalized bases
+                 (``plan.schema``); σ² access goes through the unified
+                 protocol (``plan.sigma2``).
     use_kernel:  route chains through the fused Pallas kernel or the jitted
                  batched jnp path.  The default ``None`` resolves per
                  backend — Pallas on TPU, batched jnp elsewhere.
@@ -146,7 +149,7 @@ class PlusEngine(ChainRegistry):
         g = len(cliques)
         m = int(np.prod(dims)) if dims else 1
         mz = int(np.prod(zdims)) if zdims else 1
-        sig = np.sqrt([self.plan.sigmas[c] for c in cliques])[:, None]
+        sig = np.sqrt([self.plan.sigma2(c) for c in cliques])[:, None]
         has_a = any(f is not None for f in stage_a)
         has_b = any(f is not None for f in stage_b)
         a_facs = [None if f is None else jnp.asarray(f, jnp.float32)
@@ -299,8 +302,8 @@ class PlusEngine(ChainRegistry):
                 for c in cliques:
                     v = np.asarray(marginals[c], np.float64).reshape(-1)
                     z = np.asarray(self._draw_empty(all_keys, c))
-                    sig = math.sqrt(self.plan.sigmas[c])
-                    out[c] = Measurement(c, v + sig * z, self.plan.sigmas[c])
+                    s2 = self.plan.sigma2(c)
+                    out[c] = Measurement(c, v + math.sqrt(s2) * z, s2)
                 continue
             s = self._measure_specs[tok]
             g, m = s["g"], s["m"]
@@ -318,7 +321,7 @@ class PlusEngine(ChainRegistry):
                 om = s["combine"](jnp.asarray(vs), z)
             om = np.asarray(om)
             for i, c in enumerate(cliques):
-                out[c] = Measurement(c, om[i], self.plan.sigmas[c])
+                out[c] = Measurement(c, om[i], self.plan.sigma2(c))
         return out
 
     def _measure_group_kernel(self, s: dict, v_stack, z):

@@ -7,43 +7,92 @@ run replicated (noise keys are identical across devices, so each device holds
 the same noisy answers — measurement is read-only on the records).
 
 The paper notes base mechanisms "can be run in parallel" (§5.2); this module
-is that observation turned into a pjit/shard_map program.
+is that observation turned into a pjit/shard_map program.  The replicated
+transform is served by whatever engine the plan's family provides via the
+unified plan protocol (``plan.engine(...)``, docs/DESIGN.md §9) — plain
+plans route through :class:`~repro.engine.engine.MarginalEngine`, RP+ plans
+through :class:`~repro.engine.plus_engine.PlusEngine`; this module never
+branches on the concrete plan type.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+import weakref
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.domain import Clique, Domain
-from repro.core.mechanism import Measurement, noise_dtype, residual_answer
-from repro.core.select import Plan
+from repro.core.mechanism import Measurement, noise_dtype
+from repro.core.plantable import BasePlan
 
 
-# Engines cached per (plan identity, path, dtype): repeated sharded_measure
-# calls on one plan reuse the jitted group transforms instead of re-tracing.
-# The engine holds the plan strongly, so a cached id() cannot be recycled
-# while its entry lives; the size bound caps retained memory.
-_PLUS_ENGINE_CACHE: Dict[tuple, object] = {}
-_PLUS_ENGINE_CACHE_MAX = 16
+class _EngineCache:
+    """LRU cache of compiled serving engines, weak-safely keyed on the plan.
+
+    Entries are keyed on ``(id(plan), use_kernel, dtype)`` but each holds a
+    ``weakref`` to its plan and is validated with an identity check on every
+    hit — a recycled ``id`` can never alias a stale engine.  A full cache
+    evicts exactly the least-recently-used entry (the historical wholesale
+    ``.clear()`` threw away every warm engine on the 17th plan).  Cached
+    engines pin their plan (``engine.plan``), so entries normally leave via
+    LRU eviction; the per-plan ``weakref.finalize`` additionally drops
+    entries whose values don't pin the plan the moment it is collected.
+    """
+
+    def __init__(self, maxsize: int = 16):
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self._finalized: set = set()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def _key(self, plan, use_kernel: bool, dtype) -> tuple:
+        return (id(plan), bool(use_kernel), jnp.dtype(dtype).name)
+
+    def get(self, plan, use_kernel: bool, dtype):
+        key = self._key(plan, use_kernel, dtype)
+        ent = self._entries.get(key)
+        if ent is None:
+            return None
+        ref, engine = ent
+        if ref() is not plan:          # id recycled: stale entry
+            del self._entries[key]
+            return None
+        self._entries.move_to_end(key)
+        return engine
+
+    def put(self, plan, use_kernel: bool, dtype, engine) -> None:
+        key = self._key(plan, use_kernel, dtype)
+        while len(self._entries) >= self.maxsize:
+            self._entries.popitem(last=False)       # LRU, one at a time
+        self._entries[key] = (weakref.ref(plan), engine)
+        if id(plan) not in self._finalized:
+            self._finalized.add(id(plan))
+            weakref.finalize(plan, self._drop_plan, id(plan))
+
+    def _drop_plan(self, pid: int) -> None:
+        self._finalized.discard(pid)
+        for k in [k for k in self._entries if k[0] == pid]:
+            del self._entries[k]
 
 
-def _plus_engine_for(plan, use_kernel: bool, dtype):
-    from repro.engine.plus_engine import PlusEngine
-    ck = (id(plan), bool(use_kernel), jnp.dtype(dtype).name)
-    eng = _PLUS_ENGINE_CACHE.get(ck)
-    if eng is None or eng.plan is not plan:
-        if len(_PLUS_ENGINE_CACHE) >= _PLUS_ENGINE_CACHE_MAX:
-            _PLUS_ENGINE_CACHE.clear()
-        eng = _PLUS_ENGINE_CACHE[ck] = PlusEngine(
-            plan, use_kernel=use_kernel, precompile=False, dtype=dtype)
+# Engines cached per (plan, path, dtype): repeated sharded_measure calls on
+# one plan reuse the jitted group transforms instead of re-tracing.
+_ENGINE_CACHE = _EngineCache(maxsize=16)
+
+
+def _engine_for(plan: BasePlan, use_kernel: bool, dtype):
+    eng = _ENGINE_CACHE.get(plan, use_kernel, dtype)
+    if eng is None:
+        eng = plan.engine(use_kernel=use_kernel, precompile=False, dtype=dtype)
+        _ENGINE_CACHE.put(plan, use_kernel, dtype, eng)
     return eng
 
 
@@ -101,37 +150,22 @@ def sharded_marginals(domain: Domain, cliques: Sequence[Clique],
     return {c: o for c, o in zip(cliques, outs)}
 
 
-def sharded_measure(plan, records: jnp.ndarray,
+def sharded_measure(plan: BasePlan, records: jnp.ndarray,
                     key: jax.Array, mesh: Optional[Mesh] = None,
                     use_kernel: bool = False,
                     dtype=None) -> Dict[Clique, Measurement]:
     """Distributed Algorithms 1/5: sharded marginalization + residual transform.
 
-    ``plan`` is either a plain :class:`~repro.core.select.Plan` or a
-    ResidualPlanner+ :class:`~repro.core.plus.PlusPlan` — the + path routes
-    the replicated transform through the signature-batched
-    :class:`~repro.engine.plus_engine.PlusEngine` with the generalized
-    ``(Sub_i, Γ_i)`` factors.  ``dtype`` governs the marginal tables and the
-    noise draws; ``None`` resolves to
-    :func:`repro.core.mechanism.noise_dtype` (float64 under jax x64) rather
-    than the historical hard-coded float32, so the distributed path matches
-    the core path's precision.
+    ``plan`` is any :class:`~repro.core.plantable.BasePlan` — plain
+    :class:`~repro.core.select.Plan` or ResidualPlanner+
+    :class:`~repro.core.plus.PlusPlan`; the replicated transform runs on the
+    signature-batched engine the plan provides (``plan.engine``), cached per
+    (plan, path, dtype).  ``dtype`` governs the marginal tables and the noise
+    draws; ``None`` resolves to :func:`repro.core.mechanism.noise_dtype`
+    (float64 under jax x64), so the distributed path matches the core path's
+    precision.
     """
-    from repro.core.plus import PlusPlan
     dtype = noise_dtype() if dtype is None else dtype
-    domain = plan.schema.domain if isinstance(plan, PlusPlan) else plan.domain
-    margs = sharded_marginals(domain, plan.cliques, records, mesh, dtype=dtype)
-    if isinstance(plan, PlusPlan):
-        return _plus_engine_for(plan, use_kernel, dtype).measure(margs, key)
-    out: Dict[Clique, Measurement] = {}
-    keys = jax.random.split(key, len(plan.cliques))
-    for k, clique in zip(keys, plan.cliques):
-        dims = [domain.attributes[i].size for i in clique]
-        m = int(np.prod(dims)) if clique else 1
-        sigma = math.sqrt(plan.sigmas[clique])
-        z = jax.random.normal(k, (m,), dtype)
-        hv = residual_answer(domain, clique, margs[clique], use_kernel)
-        hz = residual_answer(domain, clique, z, use_kernel)
-        out[clique] = Measurement(clique, np.asarray(hv + sigma * hz),
-                                  plan.sigmas[clique])
-    return out
+    margs = sharded_marginals(plan.domain, plan.cliques, records, mesh,
+                              dtype=dtype)
+    return _engine_for(plan, use_kernel, dtype).measure(margs, key)

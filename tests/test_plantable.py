@@ -1,0 +1,301 @@
+"""PlanTable IR (docs/DESIGN.md §9): arrayized closure vs the legacy dict
+path, batched variance/covariance vs fp64 brute force, the unified plan
+protocol, and the sharded engine LRU cache."""
+import gc
+import math
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+import jax
+
+from repro.core import Domain, MarginalWorkload, all_kway, pcost_of_plan
+from repro.core.plantable import PlanTable, plan_table, sov_closed_form
+from repro.core.reconstruct import (cross_marginal_covariance_dense,
+                                    marginal_covariance_dense)
+from repro.core.select import (_coefficients, _variance_matrix,
+                               legacy_maxvar_sigmas, legacy_sov_sigmas,
+                               select, select_convex, select_max_variance,
+                               select_sum_of_variances)
+
+
+def _random_workload(sizes, k):
+    dom = Domain.create(sizes)
+    k = min(k, dom.n_attrs)
+    return all_kway(dom, k, include_lower=True)
+
+
+# ---------------------------------------------------------------------------
+# IR arrays vs legacy dict/itertools coefficients
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=20)
+@given(st.lists(st.integers(2, 6), min_size=2, max_size=5),
+       st.integers(1, 3))
+def test_table_matches_legacy_coefficients(sizes, k):
+    wk = _random_workload(sizes, k)
+    cl, p, v = _coefficients(wk)
+    t = PlanTable.for_workload(wk)
+    assert t.cliques == cl                      # identical (len, lex) order
+    assert np.allclose(t.p, p, rtol=1e-12)
+    assert np.allclose(t.v, v, rtol=1e-12)
+    # the COO incidence is the legacy variance matrix, entry for entry
+    rows, cols, vals = _variance_matrix(wk, cl)
+    legacy = {(r, c): val for r, c, val in zip(rows, cols, vals)}
+    table = {(r, c): val for r, c, val in
+             zip(t.inc_rows, t.inc_cols, t.inc_vals)}
+    assert set(legacy) == set(table)
+    for key, val in legacy.items():
+        assert math.isclose(table[key], val, rel_tol=1e-12)
+
+
+def test_table_weight_override_modes():
+    dom = Domain.create([3, 4, 2])
+    wk = MarginalWorkload(dom, ((0,), (0, 1), (1, 2)), {(0,): 5.0})
+    t = plan_table(wk)
+    override = {(0, 1): 3.0}
+    _, _, v_leg = _coefficients(wk, override)   # historical default-1.0 mode
+    assert np.allclose(t.sov_coeffs(override), v_leg, rtol=1e-12)
+    w = t.weight_vector(override, default_to_workload=True)
+    assert w.tolist() == [5.0, 3.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# Three objectives: IR path vs legacy dict path
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(st.lists(st.integers(2, 5), min_size=2, max_size=4),
+       st.integers(1, 2))
+def test_sov_ir_matches_legacy(sizes, k):
+    wk = _random_workload(sizes, k)
+    plan = select_sum_of_variances(wk, 1.0)
+    leg = legacy_sov_sigmas(wk, 1.0)
+    for c in plan.cliques:
+        assert math.isclose(plan.sigmas[c], leg[c], rel_tol=1e-12), c
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.lists(st.integers(2, 5), min_size=2, max_size=4))
+def test_maxvar_ir_matches_legacy(sizes):
+    wk = _random_workload(sizes, 2)
+    plan = select_max_variance(wk, 1.0, iters=1500, backend="numpy")
+    _, primal = legacy_maxvar_sigmas(wk, 1.0, iters=1500)
+    assert math.isclose(plan.loss_value, primal, rel_tol=1e-6)
+    assert plan.pcost == pytest.approx(1.0, rel=1e-6)
+
+
+def test_maxvar_device_backend_matches_numpy():
+    dom = Domain.create([5, 3, 4, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    a = select_max_variance(wk, 1.0, iters=1200, backend="numpy")
+    b = select_max_variance(wk, 1.0, iters=1200, backend="device", chunk=100)
+    assert math.isclose(a.loss_value, b.loss_value, rel_tol=1e-4)
+    assert b.pcost == pytest.approx(1.0, rel=1e-6)
+
+
+def test_convex_ir_matches_maxvar_dual():
+    dom = Domain.create([4, 3, 5])
+    wk = all_kway(dom, 2, include_lower=True)
+    cv = select_convex(wk, 1.0, loss="max_variance", steps=2500)
+    mv = select_max_variance(wk, 1.0)
+    assert cv.loss_value <= mv.loss_value * 1.02
+    assert cv.loss_value >= mv.loss_value * 0.999   # mv is the exact optimum
+    assert cv.pcost == pytest.approx(1.0, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# select() dispatcher: convex objective + user-supplied losses (satellite)
+# ---------------------------------------------------------------------------
+
+def test_select_dispatch_convex_and_callable_loss():
+    import jax.numpy as jnp
+    dom = Domain.create([4, 3])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select(wk, 1.0, objective="convex")       # defaults to max_variance
+    assert plan.objective == "max_variance"
+    assert plan.loss_value > 0.0                     # set at construction
+
+    def l2_of_variances(var):                        # positively 1-homogeneous
+        return jnp.sqrt(jnp.sum(var * var))
+
+    p2 = select(wk, 1.0, objective="convex", loss=l2_of_variances, steps=1500)
+    assert p2.objective == "l2_of_variances"
+    got = float(np.sqrt(np.sum(p2.variances_array() ** 2)))
+    assert p2.loss_value == pytest.approx(got, rel=1e-5)  # callable precision
+    assert p2.pcost == pytest.approx(1.0, rel=1e-9)
+    # callable objective shorthand routes the same way
+    p3 = select(wk, 1.0, objective=l2_of_variances, steps=1500)
+    assert p3.loss_value == pytest.approx(p2.loss_value, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Zero-weight sliver path: no overflow at tiny budgets (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_sliver_path_finite_at_tiny_budget():
+    dom = Domain.create([3, 4])
+    wk = MarginalWorkload(dom, ((0,), (0, 1)))
+    weights = {(0,): 1.0, (0, 1): 0.0}       # (1,) and (0,1) get v_A == 0
+    for budget in (1.0, 1e-6, 1e-300):
+        plan = select_sum_of_variances(wk, budget, weights)
+        sig = plan.sigma
+        assert np.all(np.isfinite(sig)) and np.all(sig > 0), budget
+        assert np.isfinite(plan.pcost) and np.isfinite(plan.loss_value)
+        assert plan.pcost <= budget * (1 + 1e-9)
+    # the closed form itself: historic p/eps_share overflowed to inf here
+    sig = sov_closed_form(np.array([0.5, 0.5]), np.array([1.0, 0.0]), 1e-300)
+    assert np.all(np.isfinite(sig))
+
+
+# ---------------------------------------------------------------------------
+# Batched variances / covariances vs fp64 brute force (satellite)
+# ---------------------------------------------------------------------------
+
+def test_workload_variances_vs_dense_oracle():
+    dom = Domain.create([2, 3, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select_sum_of_variances(wk, 1.0)
+    var = plan.variances_array()
+    for i, c in enumerate(wk.cliques):
+        dense = marginal_covariance_dense(plan, c)
+        assert np.allclose(np.diag(dense), var[i], atol=1e-10), c
+        assert plan.marginal_variance(c) == pytest.approx(var[i], rel=1e-12)
+
+
+def test_cross_covariance_vs_dense_oracle(rng):
+    dom = Domain.create([3, 2, 4])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select_max_variance(wk, 1.0, iters=500)   # non-uniform sigmas
+    pairs = [((0, 1), (1, 2)), ((0, 1), (0, 1)), ((0,), (1, 2)),
+             ((0, 2), (1,)), ((0,), (0, 1)), ((2,), (2,))]
+    got = plan.workload_covariances(pairs)
+    for g, (a, b) in zip(got, pairs):
+        dense = cross_marginal_covariance_dense(plan, a, b)
+        # aligned cell pair: coordinates agree on every shared axis
+        coords = {i: int(rng.integers(dom.attributes[i].size))
+                  for i in set(a) | set(b)}
+        ia = int(np.ravel_multi_index([coords[i] for i in a],
+                                      dom.clique_sizes(a))) if a else 0
+        ib = int(np.ravel_multi_index([coords[i] for i in b],
+                                      dom.clique_sizes(b))) if b else 0
+        assert g == pytest.approx(dense[ia, ib], rel=1e-9, abs=1e-12), (a, b)
+        assert plan.marginal_covariance(a, b) == pytest.approx(g, rel=1e-12)
+    # self-covariance degenerates to the Thm-4 variance
+    assert plan.marginal_covariance((0, 1), (0, 1)) == pytest.approx(
+        plan.marginal_variance((0, 1)), rel=1e-12)
+
+
+def test_cross_covariance_empirical(rng):
+    """Monte-Carlo: reconstructed marginals correlate exactly as the IR says."""
+    from repro.core.mechanism import exact_marginals_from_x, measure_np
+    from repro.core.reconstruct import reconstruct_marginal
+    dom = Domain.create([2, 3])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select_sum_of_variances(wk, 2.0)
+    x = rng.integers(0, 9, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    a, b = (0,), (0, 1)
+    n = 3000
+    sa = np.empty((n, 2))
+    sb = np.empty((n, 6))
+    for t in range(n):
+        meas = measure_np(plan, margs, rng)
+        sa[t] = reconstruct_marginal(plan, meas, a)
+        sb[t] = reconstruct_marginal(plan, meas, b)
+    emp = (sa - sa.mean(0)).T @ (sb - sb.mean(0)) / n
+    want = plan.marginal_covariance(a, b)
+    # aligned cells: a-cell i vs b-cell (i, j)
+    for i in range(2):
+        for j in range(3):
+            band = 6 * plan.marginal_variance(b) / math.sqrt(n)
+            assert abs(emp[i, 3 * i + j] - want) < band
+
+
+# ---------------------------------------------------------------------------
+# Unified plan protocol
+# ---------------------------------------------------------------------------
+
+def test_plus_plan_carries_the_same_protocol():
+    from repro.core.plus import PlusSchema, select_plus, sov_coeff_plus
+    from repro.core.domain import subsets
+    dom = Domain.create([3, 4, 2])
+    wk = MarginalWorkload(dom, ((0,), (0, 1), (1, 2)))
+    schema = PlusSchema.create(dom, ["prefix", "identity", "prefix"],
+                               strategy_mode="w")
+    plan = select_plus(wk, schema, 1.0, "sov")
+    assert plan.domain is dom                       # protocol property
+    for c in wk.cliques:                            # IR sov == legacy Thm-8 sum
+        legacy = sum(plan.sigmas[s] * sov_coeff_plus(schema, s, c)
+                     for s in subsets(c))
+        assert plan.sov(c) == pytest.approx(legacy, rel=1e-9)
+    assert plan.sigma2((0,)) == pytest.approx(plan.sigmas[(0,)], rel=1e-15)
+    assert set(plan.workload_variances()) == set(wk.cliques)
+
+
+def test_no_plan_type_branching_in_engines():
+    """Acceptance: engines consume the plan protocol, never the concrete type."""
+    import pathlib
+    import repro.engine as eng
+    root = pathlib.Path(eng.__file__).parent
+    for path in root.glob("*.py"):
+        src = path.read_text()
+        assert "isinstance(plan, PlusPlan)" not in src, path.name
+
+
+def test_discrete_consumes_protocol_and_rejects_plus():
+    import random
+    from repro.core.discrete import measure_discrete
+    from repro.core.plus import PlusSchema, select_plus
+    dom = Domain.create([3, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    schema = PlusSchema.create(dom, ["prefix", "identity"], strategy_mode="w")
+    pplan = select_plus(wk, schema, 1.0, "sov")
+    with pytest.raises(ValueError):
+        measure_discrete(pplan, {}, random.Random(0))
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine cache: LRU + weak-safe plan keying (satellite)
+# ---------------------------------------------------------------------------
+
+def test_engine_cache_lru_and_weak_keys():
+    from repro.engine.sharded import _EngineCache
+
+    class _P:                      # stand-in plan (weakref-able, id-hashable)
+        pass
+
+    cache = _EngineCache(maxsize=3)
+    plans = [_P() for _ in range(4)]
+    for i, p in enumerate(plans[:3]):
+        cache.put(p, False, np.float32, f"eng{i}")
+    assert len(cache) == 3
+    assert cache.get(plans[0], False, np.float32) == "eng0"   # now MRU
+    cache.put(plans[3], False, np.float32, "eng3")
+    # exactly ONE entry evicted (the LRU: plans[1]), not a wholesale clear
+    assert len(cache) == 3
+    assert cache.get(plans[1], False, np.float32) is None
+    assert cache.get(plans[0], False, np.float32) == "eng0"
+    assert cache.get(plans[3], False, np.float32) == "eng3"
+    # weak keying: collecting a plan drops its entries immediately
+    del plans[3]
+    gc.collect()
+    assert len(cache) == 2
+
+
+def test_sharded_measure_uses_protocol_dispatch():
+    import jax.numpy as jnp
+    from repro.data.tabular import synth_domain, synthetic_records
+    from repro.engine.sharded import _ENGINE_CACHE, sharded_measure
+    from repro.engine.engine import MarginalEngine
+    dom = synth_domain(3, 3)
+    wk = all_kway(dom, 2)
+    plan = select_sum_of_variances(wk, 5.0)
+    recs = synthetic_records(dom, 200, seed=0)
+    meas = sharded_measure(plan, jnp.asarray(recs), jax.random.PRNGKey(0))
+    assert set(meas) == set(plan.cliques)
+    # plain plans route through MarginalEngine via plan.engine()
+    from repro.core.mechanism import noise_dtype
+    eng = _ENGINE_CACHE.get(plan, False, noise_dtype())
+    assert isinstance(eng, MarginalEngine)
