@@ -12,14 +12,12 @@ Run:  PYTHONPATH=src python examples/quickstart.py [--discrete | --plus]
 """
 import argparse
 import math
-import random
 
 import numpy as np
 import jax
 
 from repro.core import (MarginalWorkload, PrivacyBudget, all_kway,
                         pcost_of_plan, reconstruct_all, select)
-from repro.core.discrete import measure_discrete
 from repro.core.mechanism import measure_np
 from repro.data.tabular import adult_domain, marginals_from_records, synthetic_records
 from repro.engine.sharded import sharded_measure
@@ -105,8 +103,18 @@ def main():
     records = synthetic_records(dom, 100_000, seed=0)
     margs = marginals_from_records(dom, plan.cliques, records)
     if args.discrete:
-        meas = measure_discrete(plan, margs, random.Random(0))
-        print("measured with exact discrete Gaussian noise (Alg 3)")
+        # secure release path (Alg 3) at engine tier: signature-batched
+        # fused H/Y-dagger chains, batched integer-lane noise (DESIGN.md §10)
+        from repro.core.discrete import discrete_pcost_of_plan
+        engine = plan.engine(secure=True)
+        meas = engine.measure(margs, jax.random.PRNGKey(0))
+        print(f"measured with exact discrete Gaussian noise (Alg 3): "
+              f"{engine.stats.measure_signatures} signature groups, "
+              f"{engine.stats.device_h_groups} H groups on device, "
+              f"{engine.stats.exact_h_groups} on the exact-int tier")
+        print(f"discrete pcost actually spent: "
+              f"{discrete_pcost_of_plan(plan):.6f} "
+              f"(continuous: {pcost_of_plan(plan):.6f})")
     else:
         meas = measure_np(plan, margs, np.random.default_rng(0))
 

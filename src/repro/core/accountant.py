@@ -17,6 +17,17 @@ def _phi(x: float) -> float:
     return 0.5 * (1.0 + math.erf(x / math.sqrt(2.0)))
 
 
+def _log_phi(x: float) -> float:
+    """log Φ(x), finite for arbitrarily negative x.
+
+    ``erfc`` underflows to 0 near x ≈ -37.5; below that the standard
+    asymptotic Φ(x) ≈ φ(x)/(-x) takes over (relative error < 1/x² there).
+    """
+    if x > -37.0:
+        return math.log(0.5 * math.erfc(-x / math.sqrt(2.0)))
+    return -0.5 * x * x - math.log(-x) - 0.5 * math.log(2.0 * math.pi)
+
+
 def zcdp_rho(pcost: float) -> float:
     return pcost / 2.0
 
@@ -26,11 +37,21 @@ def gdp_mu(pcost: float) -> float:
 
 
 def approx_dp_delta(pcost: float, eps: float) -> float:
-    """δ as a function of ε for a mechanism with the given pcost (Def. 2, [5])."""
+    """δ as a function of ε for a mechanism with the given pcost (Def. 2, [5]).
+
+    The ``exp(ε)·Φ(·)`` term is evaluated in log space — the naive product is
+    ``inf · 0 = nan`` for ε ≳ 709 — and the result is clamped to [0, 1]:
+    the two Φ terms cancel catastrophically at large pcost/ε and used to
+    return small negative δ.
+    """
     if pcost <= 0:
         return 0.0
     r = math.sqrt(pcost)
-    return _phi(r / 2.0 - eps / r) - math.exp(eps) * _phi(-r / 2.0 - eps / r)
+    # term2 = exp(eps)·Φ(-r/2 - eps/r) ≤ δ's first term ≤ 1 mathematically;
+    # the exponent cap only guards float round-up at the boundary.
+    term2 = math.exp(min(eps + _log_phi(-r / 2.0 - eps / r), 1.0))
+    delta = _phi(r / 2.0 - eps / r) - term2
+    return min(1.0, max(0.0, delta))
 
 
 def approx_dp_eps(pcost: float, delta: float, hi: float = 200.0) -> float:
@@ -57,13 +78,26 @@ def pcost_for_mu(mu: float) -> float:
     return mu * mu
 
 
-def pcost_for_eps_delta(eps: float, delta: float) -> float:
-    """Largest pcost whose (ε,δ) curve passes under the target (bisection)."""
+def pcost_for_eps_delta(eps: float, delta: float, hi_cap: float = 1e12) -> float:
+    """Largest pcost whose (ε,δ) curve passes under the target (bisection).
+
+    Contract: ``delta`` must lie strictly inside (0, 1) and ``eps`` must be
+    non-negative; a target the δ(pcost) curve cannot reach below ``hi_cap``
+    raises ``ValueError`` (the historical version broke out of the doubling
+    loop silently and bisected against an unreachable target, returning an
+    arbitrary interior point).
+    """
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    if eps < 0.0:
+        raise ValueError(f"eps must be >= 0, got {eps}")
     lo, hi = 0.0, 1.0
     while approx_dp_delta(hi, eps) < delta:
         hi *= 2.0
-        if hi > 1e9:
-            break
+        if hi > hi_cap:
+            raise ValueError(
+                f"(eps={eps}, delta={delta}) unreachable: delta({hi_cap:g}, "
+                f"eps) = {approx_dp_delta(hi_cap, eps):g} < delta")
     for _ in range(200):
         mid = (lo + hi) / 2.0
         if approx_dp_delta(mid, eps) < delta:

@@ -453,8 +453,16 @@ class BasePlan:
         return dict(zip(self.workload.cliques,
                         map(float, self.variances_array())))
 
-    def engine(self, use_kernel=None, precompile: bool = True, dtype=None):
-        """The measurement/reconstruction engine serving this plan family."""
+    def engine(self, use_kernel=None, precompile: bool = True, dtype=None,
+               secure: bool = False, digits: int = 4):
+        """The measurement/reconstruction engine serving this plan family.
+
+        ``secure=True`` requests the numerically secure release path
+        (Alg 3 — integer queries + exact discrete Gaussian noise,
+        :class:`~repro.engine.discrete_engine.DiscreteEngine`); plan
+        families without an integer-query rotation raise ``ValueError``.
+        ``digits`` is the σ̄ rationalization of the secure path.
+        """
         raise NotImplementedError
 
 

@@ -272,7 +272,12 @@ class PlusPlan(BasePlan):
         return max(float(cell_variances_plus(self.schema, self.sigmas, c).max())
                    for c in self.workload.cliques)
 
-    def engine(self, use_kernel=None, precompile: bool = True, dtype=None):
+    def engine(self, use_kernel=None, precompile: bool = True, dtype=None,
+               secure: bool = False, digits: int = 4):
+        if secure:
+            raise ValueError("secure release (Alg 3) requires a plain "
+                             "identity-basis plan; RP+ plans have no "
+                             "integer-query rotation")
         from repro.engine.plus_engine import PlusEngine
         return PlusEngine(self, use_kernel=use_kernel,
                           precompile=precompile, dtype=dtype)

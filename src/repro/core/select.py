@@ -78,7 +78,13 @@ class Plan(BasePlan):
         """Batched cross-marginal covariances: one segment-sum for all pairs."""
         return self.table.cross_covariances(self.sigma, pairs)
 
-    def engine(self, use_kernel=None, precompile: bool = True, dtype=None):
+    def engine(self, use_kernel=None, precompile: bool = True, dtype=None,
+               secure: bool = False, digits: int = 4):
+        if secure:
+            from repro.engine.discrete_engine import DiscreteEngine
+            return DiscreteEngine(self, use_kernel=use_kernel,
+                                  precompile=precompile, dtype=dtype,
+                                  digits=digits)
         from repro.engine.engine import MarginalEngine
         return MarginalEngine(self, use_kernel=use_kernel,
                               precompile=precompile, dtype=dtype)

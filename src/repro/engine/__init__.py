@@ -1,4 +1,5 @@
 from .engine import EngineStats, MarginalEngine
 from .plus_engine import PlusEngine
+from .discrete_engine import DiscreteEngine
 from .sharded import sharded_marginals, sharded_measure
 from .corpus_stats import corpus_marginal_release

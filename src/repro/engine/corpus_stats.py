@@ -26,14 +26,27 @@ def corpus_marginal_release(domain: Domain, workload: MarginalWorkload,
                             records: jnp.ndarray, budget: PrivacyBudget,
                             pcost: float, key: jax.Array,
                             objective: str = "sum_of_variances",
-                            mesh=None) -> Tuple[Dict, Dict, Dict]:
+                            mesh=None, secure: bool = False,
+                            digits: int = 4) -> Tuple[Dict, Dict, Dict]:
     """Select → (sharded) measure → reconstruct; charges the shared budget.
+
+    ``secure=True`` releases through the numerically secure path (Alg 3,
+    :class:`~repro.engine.discrete_engine.DiscreteEngine`): integer queries
+    plus exact discrete Gaussian noise at the rationalized σ̄ ≥ σ, with the
+    budget charged the *exact* discrete pcost 2·Σ_A ρ_A
+    (:func:`repro.core.discrete.discrete_pcost_of_plan` — never more than
+    the continuous ``pcost_of_plan``, Thm 6).
 
     Returns (noisy marginal tables, per-marginal variances, privacy report).
     """
     plan = select(workload, pcost_budget=pcost, objective=objective)
-    budget.charge(pcost_of_plan(plan))
-    meas = sharded_measure(plan, records, key, mesh)
+    if secure:
+        from repro.core.discrete import discrete_pcost_of_plan
+        budget.charge(discrete_pcost_of_plan(plan, digits))
+    else:
+        budget.charge(pcost_of_plan(plan))
+    meas = sharded_measure(plan, records, key, mesh, secure=secure,
+                           digits=digits)
     tables = reconstruct_all(plan, meas)
     variances = plan.workload_variances()
     return tables, variances, budget.report()

@@ -46,6 +46,10 @@ class EngineStats:
     fused_chains: int = 0          # chains that fit the fused VMEM budget
     fallback_chains: int = 0       # chains planned onto the per-axis path
     compile_warmups: int = 0
+    # DiscreteEngine exactness-boundary counters (docs/DESIGN.md §10):
+    device_h_groups: int = 0       # H groups served by the device chain + rint
+    exact_h_groups: int = 0        # H groups on the exact int64/big-int path
+    host_y_groups: int = 0         # Y† groups on the float64 host fallback
 
 
 class ChainRegistry:

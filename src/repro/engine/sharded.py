@@ -53,11 +53,17 @@ class _EngineCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def _key(self, plan, use_kernel: bool, dtype) -> tuple:
-        return (id(plan), bool(use_kernel), jnp.dtype(dtype).name)
+    def _key(self, plan, use_kernel: bool, dtype, secure: bool = False,
+             digits: int = 4) -> tuple:
+        # digits is part of the key: a secure engine's σ̄/γ² are baked in at
+        # construction, so two rationalizations must never share an engine
+        # (the noise served would disagree with the privacy charged).
+        return (id(plan), bool(use_kernel), jnp.dtype(dtype).name,
+                bool(secure), int(digits) if secure else None)
 
-    def get(self, plan, use_kernel: bool, dtype):
-        key = self._key(plan, use_kernel, dtype)
+    def get(self, plan, use_kernel: bool, dtype, secure: bool = False,
+            digits: int = 4):
+        key = self._key(plan, use_kernel, dtype, secure, digits)
         ent = self._entries.get(key)
         if ent is None:
             return None
@@ -68,8 +74,9 @@ class _EngineCache:
         self._entries.move_to_end(key)
         return engine
 
-    def put(self, plan, use_kernel: bool, dtype, engine) -> None:
-        key = self._key(plan, use_kernel, dtype)
+    def put(self, plan, use_kernel: bool, dtype, engine,
+            secure: bool = False, digits: int = 4) -> None:
+        key = self._key(plan, use_kernel, dtype, secure, digits)
         while len(self._entries) >= self.maxsize:
             self._entries.popitem(last=False)       # LRU, one at a time
         self._entries[key] = (weakref.ref(plan), engine)
@@ -83,16 +90,18 @@ class _EngineCache:
             del self._entries[k]
 
 
-# Engines cached per (plan, path, dtype): repeated sharded_measure calls on
-# one plan reuse the jitted group transforms instead of re-tracing.
+# Engines cached per (plan, path, dtype, secure): repeated sharded_measure
+# calls on one plan reuse the jitted group transforms instead of re-tracing.
 _ENGINE_CACHE = _EngineCache(maxsize=16)
 
 
-def _engine_for(plan: BasePlan, use_kernel: bool, dtype):
-    eng = _ENGINE_CACHE.get(plan, use_kernel, dtype)
+def _engine_for(plan: BasePlan, use_kernel: bool, dtype,
+                secure: bool = False, digits: int = 4):
+    eng = _ENGINE_CACHE.get(plan, use_kernel, dtype, secure, digits)
     if eng is None:
-        eng = plan.engine(use_kernel=use_kernel, precompile=False, dtype=dtype)
-        _ENGINE_CACHE.put(plan, use_kernel, dtype, eng)
+        eng = plan.engine(use_kernel=use_kernel, precompile=False, dtype=dtype,
+                          secure=secure, digits=digits)
+        _ENGINE_CACHE.put(plan, use_kernel, dtype, eng, secure, digits)
     return eng
 
 
@@ -153,19 +162,28 @@ def sharded_marginals(domain: Domain, cliques: Sequence[Clique],
 def sharded_measure(plan: BasePlan, records: jnp.ndarray,
                     key: jax.Array, mesh: Optional[Mesh] = None,
                     use_kernel: bool = False,
-                    dtype=None) -> Dict[Clique, Measurement]:
-    """Distributed Algorithms 1/5: sharded marginalization + residual transform.
+                    dtype=None, secure: bool = False,
+                    digits: int = 4) -> Dict[Clique, Measurement]:
+    """Distributed Algorithms 1/5 (and 3): sharded marginalization + transform.
 
     ``plan`` is any :class:`~repro.core.plantable.BasePlan` — plain
     :class:`~repro.core.select.Plan` or ResidualPlanner+
     :class:`~repro.core.plus.PlusPlan`; the replicated transform runs on the
     signature-batched engine the plan provides (``plan.engine``), cached per
-    (plan, path, dtype).  ``dtype`` governs the marginal tables and the noise
-    draws; ``None`` resolves to :func:`repro.core.mechanism.noise_dtype`
-    (float64 under jax x64), so the distributed path matches the core path's
-    precision.
+    (plan, path, dtype, secure).  ``dtype`` governs the marginal tables and
+    the noise draws; ``None`` resolves to
+    :func:`repro.core.mechanism.noise_dtype` (float64 under jax x64), so the
+    distributed path matches the core path's precision.
+
+    ``secure=True`` serves the numerically secure release (Alg 3) through
+    :class:`~repro.engine.discrete_engine.DiscreteEngine`: same sharded
+    marginalization, integer-query H/Y† transforms on the fused engine tier,
+    exact discrete Gaussian noise seeded deterministically from ``key``
+    (``digits`` sets the σ̄ rationalization).  Plans without an integer-query
+    rotation (RP+) raise ``ValueError``.
     """
     dtype = noise_dtype() if dtype is None else dtype
     margs = sharded_marginals(plan.domain, plan.cliques, records, mesh,
                               dtype=dtype)
-    return _engine_for(plan, use_kernel, dtype).measure(margs, key)
+    return _engine_for(plan, use_kernel, dtype, secure, digits).measure(
+        margs, key)

@@ -1,0 +1,64 @@
+"""Privacy accountant boundary behavior: δ clamped to [0, 1], log-space
+stability at large ε, and the documented pcost_for_eps_delta contract."""
+import math
+
+import pytest
+
+from repro.core.accountant import (PrivacyBudget, approx_dp_delta,
+                                   approx_dp_eps, pcost_for_eps_delta,
+                                   zcdp_rho)
+
+
+def test_delta_clamped_to_unit_interval():
+    # the historical version returned small negative δ from catastrophic
+    # cancellation at large pcost/ε, and nan beyond exp overflow
+    for pcost in (1e-6, 0.1, 1.0, 100.0, 1e4, 1e6):
+        for eps in (0.0, 0.5, 5.0, 80.0, 500.0, 1000.0):
+            d = approx_dp_delta(pcost, eps)
+            assert 0.0 <= d <= 1.0, (pcost, eps, d)
+            assert not math.isnan(d)
+
+
+def test_delta_monotone_decreasing_in_eps():
+    for pcost in (0.5, 10.0, 1e4):
+        deltas = [approx_dp_delta(pcost, e) for e in (0.0, 1.0, 4.0, 16.0)]
+        assert all(a >= b - 1e-15 for a, b in zip(deltas, deltas[1:]))
+
+
+def test_delta_large_pcost_saturates_at_one():
+    assert approx_dp_delta(1e8, 1.0) == 1.0
+
+
+def test_pcost_for_eps_delta_roundtrip():
+    for eps, delta in ((0.5, 1e-9), (1.0, 1e-6), (8.0, 1e-4)):
+        pc = pcost_for_eps_delta(eps, delta)
+        assert approx_dp_delta(pc, eps) == pytest.approx(delta, rel=1e-6)
+        assert approx_dp_eps(pc, delta) == pytest.approx(eps, rel=1e-5)
+
+
+def test_pcost_for_eps_delta_large_eps():
+    # exp(eps) overflows float64 beyond eps ~ 709: the doubling loop used to
+    # run on nan and silently bisect garbage; now it brackets correctly
+    pc = pcost_for_eps_delta(800.0, 1e-6)
+    assert math.isfinite(pc) and pc > 0.0
+    assert approx_dp_delta(pc, 800.0) == pytest.approx(1e-6, rel=1e-3)
+
+
+def test_pcost_for_eps_delta_contract():
+    for bad in (0.0, 1.0, 1.5, -1e-3):
+        with pytest.raises(ValueError):
+            pcost_for_eps_delta(1.0, bad)
+    with pytest.raises(ValueError):
+        pcost_for_eps_delta(-0.1, 1e-6)
+    # unreachable under a tight cap raises instead of bisecting a lie
+    with pytest.raises(ValueError):
+        pcost_for_eps_delta(1.0, 0.5, hi_cap=1e-9)
+
+
+def test_budget_from_approx_dp():
+    b = PrivacyBudget.from_approx_dp(1.0, 1e-6)
+    assert b.total_pcost > 0
+    b.charge(b.total_pcost / 2)
+    rep = b.report()
+    assert rep["rho_zcdp"] == pytest.approx(zcdp_rho(b.spent))
+    assert 0.0 <= rep["eps_at_delta_1e-6"] <= 1.0

@@ -1,0 +1,121 @@
+"""Statistical acceptance tests for the batched integer-lane discrete
+Gaussian sampler (core/dgauss.py): exact-vs-batched distributional
+agreement, big-int fallback boundaries, and seed determinism."""
+import math
+import random
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import dgauss
+from repro.core.discrete import sample_discrete_gaussian
+
+# chi-square critical values at alpha = 1e-3 (loose: seeds are fixed, so a
+# failure here means a real distribution change, not flakiness)
+_CHI2_CRIT = {11: 31.26, 12: 32.91, 13: 34.53}
+
+
+def _exact_pmf(sigma2: float, k: int) -> float:
+    z = sum(math.exp(-x * x / (2.0 * sigma2)) for x in range(-200, 201))
+    return math.exp(-k * k / (2.0 * sigma2)) / z
+
+
+def test_chi_square_small_gamma2():
+    """Batched sampler matches the exact pmf on a small-γ² support grid."""
+    s2 = 2
+    n = 20000
+    xs = dgauss.sample(s2, n, np.random.default_rng(0))
+    assert xs.dtype == np.int64
+    lo, hi = -5, 5
+    counts = {k: int(np.sum(xs == k)) for k in range(lo, hi + 1)}
+    chi = 0.0
+    tail_obs = n - sum(counts.values())
+    tail_p = 1.0
+    for k in range(lo, hi + 1):
+        p = _exact_pmf(s2, k)
+        tail_p -= p
+        e = n * p
+        chi += (counts[k] - e) ** 2 / e
+    chi += (tail_obs - n * tail_p) ** 2 / (n * tail_p)
+    assert chi < _CHI2_CRIT[11], chi
+
+
+def test_batched_matches_legacy_moments():
+    """Batched and serial samplers draw the same distribution (both exact):
+    means and variances agree within sampling error on a rational γ²."""
+    s2 = Fraction(25, 4)
+    n = 3000
+    srng = random.Random(0)
+    legacy = np.array([sample_discrete_gaussian(s2, srng)
+                       for _ in range(n)], dtype=float)
+    batched = dgauss.sample(s2, n, np.random.default_rng(0)).astype(float)
+    se_mean = math.sqrt(float(s2) / n)
+    assert abs(legacy.mean() - batched.mean()) < 8 * se_mean
+    assert abs(legacy.var() / batched.var() - 1.0) < 0.25
+    # var(N_Z(0, σ²)) ≤ σ² (CKS Fact 21), both implementations
+    assert batched.var() <= float(s2) * 1.1
+    assert batched.var() >= float(s2) * 0.8
+
+
+def test_large_gamma2_moments():
+    """Πn_i = 10²⁰-scale γ² (the regression regime): big-int lanes, sane
+    moments — the seed-era float path raised OverflowError long before."""
+    gamma2 = Fraction(10 ** 40 * 17, 4)      # σ ≈ 1.03e20
+    xs = dgauss.sample(gamma2, 400, np.random.default_rng(1))
+    assert xs.dtype == object                # beyond int64 lanes
+    assert all(isinstance(int(v), int) for v in xs)
+    vals = np.array([float(v) for v in xs])
+    sigma = math.sqrt(float(gamma2))
+    assert abs(vals.mean()) < 5 * sigma / math.sqrt(len(vals))
+    assert 0.6 < vals.var() / sigma ** 2 < 1.5
+
+
+def test_int64_bigint_fallback_boundary():
+    """Either side of the 2^62 lane boundary: values and dtypes stay sane."""
+    below = dgauss.sample((1 << 61) - 3, 200, np.random.default_rng(2))
+    above = dgauss.sample((1 << 70) + 5, 200, np.random.default_rng(2))
+    assert below.dtype == np.int64
+    sd_below = np.std(below.astype(float))
+    sd_above = np.std(np.array([float(v) for v in above]))
+    assert 0.5 < sd_below / math.sqrt(float(1 << 61)) < 1.5
+    assert 0.5 < sd_above / math.sqrt(float(1 << 70)) < 1.5
+
+
+def test_uniform_below_paths_agree():
+    """The int64 and big-int uniform generators are both uniform: matching
+    first moments across the path boundary."""
+    n = 4000
+    small = dgauss._uniform_below(1 << 40, n, np.random.default_rng(3))
+    big = dgauss._uniform_below(1 << 80, n, np.random.default_rng(3))
+    assert small.dtype == np.int64 and big.dtype == object
+    m_small = float(np.mean(small)) / float(1 << 40)
+    m_big = float(sum(int(v) for v in big)) / n / float(1 << 80)
+    assert abs(m_small - 0.5) < 0.02
+    assert abs(m_big - 0.5) < 0.02
+    assert all(0 <= int(v) < (1 << 80) for v in big)
+
+
+def test_seed_determinism():
+    for g2 in (10 ** 6, Fraction(10 ** 41, 7)):
+        a = dgauss.sample(g2, 64, np.random.default_rng(9))
+        b = dgauss.sample(g2, 64, np.random.default_rng(9))
+        assert np.array_equal(a, b)
+    # random.Random seeds deterministically too
+    a = dgauss.sample(100, 32, random.Random(5))
+    b = dgauss.sample(100, 32, random.Random(5))
+    assert np.array_equal(a, b)
+
+
+def test_rejects_inexact_variance():
+    with pytest.raises(TypeError):
+        dgauss.sample(2.5, 4, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        dgauss.sample(0, 4, np.random.default_rng(0))
+    with pytest.raises(ValueError):
+        dgauss.sample(Fraction(-1, 2), 4, np.random.default_rng(0))
+
+
+def test_empty_draw():
+    out = dgauss.sample(4, 0, np.random.default_rng(0))
+    assert out.shape == (0,) and out.dtype == np.int64

@@ -34,6 +34,22 @@ def test_sampler_integer_support():
     assert all(isinstance(x, int) for x in xs)
 
 
+def test_sampler_big_gamma2_no_overflow():
+    """Regression (isqrt fix): γ² at Πn_i = 10²⁰ scale — and beyond float64
+    range entirely — samples fine; ``math.sqrt(float(σ²))`` raised
+    OverflowError (or silently lost precision) here."""
+    rng = random.Random(0)
+    g2 = Fraction(17 * 10 ** 40, 4)               # Πn_i = 10²⁰ scale
+    xs = [sample_discrete_gaussian(g2, rng) for _ in range(5)]
+    assert all(isinstance(x, int) for x in xs)
+    assert any(abs(x) > 10 ** 19 for x in xs)     # σ ≈ 2·10²⁰: not degenerate
+    g2_huge = Fraction(10 ** 320, 7)              # float(g2_huge) overflows
+    with pytest.raises(OverflowError):
+        float(g2_huge)
+    x = sample_discrete_gaussian(g2_huge, rng)
+    assert isinstance(x, int)
+
+
 def test_rationalize_rounds_up():
     for s in (0.3333, 1.4142, 2.7182):
         sb = rationalize_sigma(s, digits=4)

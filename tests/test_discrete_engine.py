@@ -1,0 +1,251 @@
+"""DiscreteEngine (docs/DESIGN.md §10): secure release at fused-engine tier —
+zero-noise exactness, big-γ² completion, exactness-boundary tiers, the
+no-per-clique-kron_matvec_np hot-path contract, and the sharded/corpus wiring."""
+import random
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (Domain, MarginalWorkload, PrivacyBudget, all_kway,
+                        select_sum_of_variances)
+from repro.core.discrete import (DiscreteMeasurement, clique_gamma2,
+                                 discrete_pcost_of_plan, discrete_zcdp_rho,
+                                 measure_discrete, naive_discrete_rho)
+from repro.core.mechanism import exact_marginals_from_x, pcost_of_plan
+from repro.engine import DiscreteEngine, corpus_marginal_release
+from repro.engine.sharded import sharded_measure
+
+
+def _small_plan(pcost=1.0):
+    dom = Domain.create([4, 3, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    return dom, wk, select_sum_of_variances(wk, pcost)
+
+
+_ZERO = lambda g2, n, r: np.zeros(n, dtype=object)  # noqa: E731
+
+
+def test_engine_via_plan_protocol():
+    _dom, _wk, plan = _small_plan()
+    eng = plan.engine(secure=True)
+    assert isinstance(eng, DiscreteEngine)
+    assert eng.stats.measure_signatures > 0
+    assert len(eng.chain_plans()) > 0          # H/Y†/U chains registered
+
+
+def test_zero_noise_reconstructs_exactly(rng):
+    dom, wk, plan = _small_plan()
+    x = rng.integers(0, 50, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    meas = eng.measure(margs, jax.random.PRNGKey(0), _noise_override=_ZERO)
+    tables = eng.reconstruct(meas)
+    for c in wk.cliques:
+        assert np.allclose(tables[c], margs[c], atol=1e-4), c
+
+
+def test_matches_measure_discrete_parameters(rng):
+    """σ̄/γ² (the privacy-relevant quantities) agree exactly with the
+    host-exact reference measure_discrete."""
+    dom, _wk, plan = _small_plan()
+    x = rng.integers(0, 30, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    em = eng.measure(margs, jax.random.PRNGKey(0))
+    dm = measure_discrete(plan, margs, random.Random(0))
+    for c in plan.cliques:
+        assert isinstance(em[c], DiscreteMeasurement)
+        assert em[c].sigma_bar == dm[c].sigma_bar
+        assert em[c].gamma2 == dm[c].gamma2
+        assert em[c].omega.shape == dm[c].omega.shape
+
+
+def test_zero_noise_matches_oracle_transforms(rng):
+    """Engine H/Y† (device or exact tier) ≈ the float64 kron_matvec_np oracle."""
+    dom, _wk, plan = _small_plan()
+    x = rng.integers(0, 40, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    em = eng.measure(margs, jax.random.PRNGKey(0), _noise_override=_ZERO)
+    dm = measure_discrete(plan, margs, random.Random(0), _noise_override=_ZERO)
+    for c in plan.cliques:
+        assert np.allclose(em[c].omega, dm[c].omega, atol=1e-4), c
+
+
+def test_seed_determinism(rng):
+    dom, _wk, plan = _small_plan()
+    x = rng.integers(0, 30, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    m1 = eng.measure(margs, jax.random.PRNGKey(11))
+    m2 = eng.measure(margs, jax.random.PRNGKey(11))
+    m3 = eng.measure(margs, jax.random.PRNGKey(12))
+    assert all(np.array_equal(m1[c].omega, m2[c].omega) for c in plan.cliques)
+    assert any(not np.array_equal(m1[c].omega, m3[c].omega)
+               for c in plan.cliques)
+
+
+def test_no_per_clique_kron_matvec_np_on_hot_path(rng, monkeypatch):
+    """The secure hot path never touches the per-clique host oracle."""
+    import repro.core.kron as kron
+    src = Path(__file__).resolve().parents[1] / "src/repro/engine/discrete_engine.py"
+    assert "kron_matvec_np(" not in src.read_text()   # no call sites
+    dom, _wk, plan = _small_plan()
+    x = rng.integers(0, 30, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+
+    def _boom(*a, **k):
+        raise AssertionError("kron_matvec_np called on the secure hot path")
+    monkeypatch.setattr(kron, "kron_matvec_np", _boom)
+    meas = eng.measure(margs, jax.random.PRNGKey(0))
+    assert len(meas) == len(plan.cliques)
+
+
+def test_big_gamma2_completes():
+    """γ² at (Πn_i = 10²⁰)² scale (σ̄² = 1e34 on a 10³-cell clique): the
+    seed-era float-sqrt path overflowed; the integer path completes."""
+    dom = Domain.create([10, 10, 10])
+    wk = MarginalWorkload(dom, ((0, 1, 2),))
+    plan = select_sum_of_variances(wk, 1.0)
+    plan.sigma[plan.table.index[(0, 1, 2)]] = 1e34
+    _sb, gamma2, _np = clique_gamma2(plan, (0, 1, 2))
+    assert gamma2 >= 10 ** 40                  # Πn_i = 10²⁰ scale
+    x = np.random.default_rng(0).integers(0, 100, 1000).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    meas = eng.measure(margs, jax.random.PRNGKey(0))
+    for m in meas.values():
+        assert np.all(np.isfinite(m.omega))
+    # same through the host-exact reference (batched sampler default)
+    dm = measure_discrete(plan, margs, random.Random(0))
+    assert all(np.all(np.isfinite(m.omega)) for m in dm.values())
+
+
+def test_sliver_sigma_beyond_float_range_completes():
+    """σ̄² ~ 1e300 slivers: γ² = σ̄²·Πn_i² leaves float64 range entirely —
+    ``float(gamma2)`` overflows — yet measurement completes finite."""
+    dom = Domain.create([10, 10, 10])
+    wk = MarginalWorkload(dom, ((0, 1, 2),))
+    plan = select_sum_of_variances(wk, 1.0)
+    plan.sigma[plan.table.index[(0, 1, 2)]] = 1e304   # σ̄²·Πn_i² = 1e310
+    _sb, gamma2, _ = clique_gamma2(plan, (0, 1, 2))
+    with pytest.raises(OverflowError):
+        float(gamma2)                           # the seed-era crash site
+    x = np.random.default_rng(0).integers(0, 50, 1000).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    meas = plan.engine(secure=True).measure(margs, jax.random.PRNGKey(0))
+    assert all(np.all(np.isfinite(m.omega)) for m in meas.values())
+
+
+def test_exact_h_tier_engages_on_large_counts():
+    """Counts beyond the chain dtype's exact-integer range route H to the
+    exact integer tier — and stay exact (zero-noise equality vs oracle)."""
+    dom = Domain.create([10, 10, 10])
+    wk = MarginalWorkload(dom, ((0, 1, 2),))
+    plan = select_sum_of_variances(wk, 1.0)
+    x = np.random.default_rng(2).integers(0, 10 ** 6, 1000).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng = plan.engine(secure=True)
+    em = eng.measure(margs, jax.random.PRNGKey(0), _noise_override=_ZERO)
+    assert eng.stats.exact_h_groups > 0
+    dm = measure_discrete(plan, margs, random.Random(0), _noise_override=_ZERO)
+    for c in plan.cliques:
+        # float64 oracle vs exact-int H + device Y†: agreement to Y† precision
+        scale = max(1.0, np.abs(dm[c].omega).max())
+        assert np.allclose(em[c].omega, dm[c].omega, atol=1e-4 * scale), c
+
+
+def test_fused_kernel_path_matches(rng):
+    """use_kernel=True (fused Pallas chains, interpret mode on CPU) agrees
+    with the batched-jnp path: same noise stream, same integers."""
+    dom, _wk, plan = _small_plan()
+    x = rng.integers(0, 30, dom.universe_size()).astype(float)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    eng_jnp = DiscreteEngine(plan, use_kernel=False)
+    eng_ker = DiscreteEngine(plan, use_kernel=True)
+    assert eng_ker.stats.compile_warmups > 0
+    m_jnp = eng_jnp.measure(margs, jax.random.PRNGKey(5))
+    m_ker = eng_ker.measure(margs, jax.random.PRNGKey(5))
+    for c in plan.cliques:
+        assert np.allclose(m_jnp[c].omega, m_ker[c].omega, atol=1e-4), c
+
+
+def test_sharded_measure_secure(rng):
+    from repro.data.tabular import synthetic_records
+    dom, _wk, plan = _small_plan()
+    records = synthetic_records(dom, 2000, seed=0)
+    meas = sharded_measure(plan, records, jax.random.PRNGKey(3), secure=True)
+    assert set(meas) == set(plan.cliques)
+    assert all(isinstance(m, DiscreteMeasurement) for m in meas.values())
+    # engine cache: repeated calls reuse one engine and stay deterministic
+    meas2 = sharded_measure(plan, records, jax.random.PRNGKey(3), secure=True)
+    assert all(np.array_equal(meas[c].omega, meas2[c].omega)
+               for c in plan.cliques)
+
+
+def test_engine_cache_keys_on_digits():
+    """Regression: σ̄/γ² are baked into a secure engine at construction, so
+    the sharded engine cache must never hand a digits=4 engine to a
+    digits=6 caller (noise served would disagree with privacy charged)."""
+    from repro.engine.sharded import _engine_for
+    import jax.numpy as jnp
+    _dom, _wk, plan = _small_plan()
+    e4 = _engine_for(plan, False, jnp.float32, secure=True, digits=4)
+    e6 = _engine_for(plan, False, jnp.float32, secure=True, digits=6)
+    assert e4 is not e6
+    assert e4.digits == 4 and e6.digits == 6
+    c = plan.cliques[-1]
+    assert e6.sigma_bars[c] <= e4.sigma_bars[c]   # finer rounding-up
+    assert _engine_for(plan, False, jnp.float32, secure=True, digits=4) is e4
+
+
+def test_corpus_release_secure(rng):
+    from repro.data.tabular import synthetic_records
+    dom = Domain.create([4, 3, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    records = synthetic_records(dom, 3000, seed=1)
+    budget = PrivacyBudget.from_zcdp(2.0)
+    tables, variances, report = corpus_marginal_release(
+        dom, wk, records, budget, 1.0, jax.random.PRNGKey(1), secure=True)
+    assert set(tables) == set(wk.cliques)
+    # exact discrete pcost is charged, never more than the continuous pcost
+    plan = select_sum_of_variances(wk, 1.0)
+    assert report["pcost_spent"] <= pcost_of_plan(plan) + 1e-9
+    assert report["pcost_spent"] == pytest.approx(discrete_pcost_of_plan(plan))
+
+
+def test_plus_plan_rejects_secure():
+    from repro.core.plus import PlusSchema, select_plus
+    dom = Domain.create([8, 5], kinds=["numeric", "categorical"])
+    wk = all_kway(dom, 2, include_lower=True)
+    schema = PlusSchema.create(dom, ["range", "identity"])
+    plan = select_plus(wk, schema, pcost_budget=1.0)
+    with pytest.raises(ValueError):
+        plan.engine(secure=True)
+    with pytest.raises(ValueError):
+        sharded_measure(plan, np.zeros((4, 2), np.int32),
+                        jax.random.PRNGKey(0), secure=True)
+
+
+def test_naive_rho_dominates_discrete_rho():
+    """Satellite: naive_discrete_rho (rationalized σ̄) ≥ Σ discrete ρ_A —
+    Example 2's blow-up never inverts once both sides use the same σ̄."""
+    for sizes in ([2, 2, 2], [4, 3, 2]):
+        dom = Domain.create(sizes)
+        wk = all_kway(dom, len(sizes), include_lower=True)
+        plan = select_sum_of_variances(wk, 1.0)
+        alg3 = sum(discrete_zcdp_rho(
+            dom, c, clique_gamma2(plan, c)[0]) for c in plan.cliques)
+        assert naive_discrete_rho(plan) >= float(alg3)
+
+
+def test_discrete_pcost_never_exceeds_continuous():
+    _dom, _wk, plan = _small_plan(pcost=0.7)
+    assert discrete_pcost_of_plan(plan) <= pcost_of_plan(plan) + 1e-12
+    eng = plan.engine(secure=True)
+    assert eng.pcost() == pytest.approx(discrete_pcost_of_plan(plan))
+    assert eng.rho() == pytest.approx(discrete_pcost_of_plan(plan) / 2.0)
