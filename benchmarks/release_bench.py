@@ -1,0 +1,124 @@
+"""Release-subsystem benchmarks (docs/DESIGN.md §11) → BENCH_release.json.
+
+Four CI-gated claims:
+
+* ``release/consistency_cg/d12`` — the IR-CG consistency solve vs the fp64
+  dense WLS oracle at Synth-3^12 (all ≤3-way): the preconditioned CG on the
+  batched Kron chains must be ≥5× faster than forming/solving the dense
+  normal equations;
+* ``release/consistency/synth20`` — consistency + non-negativity at a
+  Synth-10^20 all-≤3-way workload *completes* without densifying anything
+  (the contingency table alone would be 8e14 GB) under a peak-RSS guard;
+* ``release/nonneg_error/synth20`` — the postprocessed release's workload-
+  weighted error is ≤ the raw unbiased release's against the true marginals;
+* ``release/synthesize/synth20`` — 1M synthetic rows sampled from the
+  Synth-10^20 release, rows/sec recorded.
+"""
+from __future__ import annotations
+
+import resource
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import all_kway, select
+from repro.data.tabular import marginals_from_records, synth_domain, \
+    synthetic_records
+from repro.release import (dense_wls_oracle, nonneg_release,
+                           precision_weights, solve_consistency,
+                           synth_report)
+
+from .common import emit, timeit
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _perturbed_tables(plan, rng, scale=4.0):
+    """A mutually *inconsistent* noisy family (what the solver exists for)."""
+    out = {}
+    for c in plan.workload.cliques:
+        m = plan.domain.n_cells(c)
+        base = rng.uniform(20.0, 60.0, m)
+        out[c] = base * (1000.0 / base.sum()) + rng.normal(0, scale, m)
+    return out
+
+
+def bench_cg_vs_dense(fast: bool) -> None:
+    dom = synth_domain(3, 12)
+    wk = all_kway(dom, 3, include_lower=True)
+    plan = select(wk, pcost_budget=1.0)
+    rng = np.random.default_rng(0)
+    tables = _perturbed_tables(plan, rng)
+    cg = solve_consistency(plan, tables, backend="device")   # warm the jits
+    us_cg = timeit(lambda: solve_consistency(plan, tables, backend="device",
+                                             operator=cg.operator),
+                   repeats=3, warmup=1)
+    t0 = time.perf_counter()
+    dense = dense_wls_oracle(plan, tables)
+    us_dense = (time.perf_counter() - t0) * 1e6
+    scale = max(1.0, float(np.abs(dense.r).max()))
+    agree = float(np.abs(cg.r - dense.r).max() / scale)
+    emit("release/consistency_cg/d12", us_cg,
+         f"{us_dense / us_cg:.1f}x vs dense WLS",
+         speedup_vs_dense=round(us_dense / us_cg, 2),
+         dense_us=round(us_dense, 1), cg_iterations=cg.iterations,
+         max_rel_diff_vs_dense=agree, n_coords=cg.operator.n_coords)
+
+
+def bench_synth20(fast: bool) -> None:
+    n_records = 50_000 if fast else 200_000
+    dom = synth_domain(10, 20)
+    wk = all_kway(dom, 3, include_lower=True)
+    plan = select(wk, pcost_budget=1.0)
+    records = synthetic_records(dom, n_records, seed=0)
+    margs = marginals_from_records(dom, plan.cliques, records)
+    engine = plan.engine(use_kernel=False, precompile=False)
+    raw, meas = engine.release(margs, jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    nn = nonneg_release(plan, raw)          # total fitted from the release
+    post_s = time.perf_counter() - t0
+    total = float(nn[wk.cliques[0]].sum())
+    rss = _peak_rss_mb()
+    dense_table_gb = dom.universe_size() * 8 / 2 ** 30
+    emit("release/consistency/synth20", post_s * 1e6,
+         f"peak_rss={rss:.0f}MB vs dense {dense_table_gb:.1e}GB",
+         completes=True, peak_rss_mb=round(rss, 1),
+         workload_marginals=len(wk.cliques),
+         densify_impossible=bool(rss / 1024 < dense_table_gb))
+
+    # workload-weighted error: postprocessed must beat the raw release
+    w = precision_weights(plan)
+    true = marginals_from_records(dom, wk.cliques, records)
+    err_raw = err_nn = 0.0
+    nonneg_violation = 0.0
+    for wi, c in enumerate(wk.cliques):
+        err_raw += w[wi] * float(((raw[c] - true[c]) ** 2).sum())
+        err_nn += w[wi] * float(((nn[c] - true[c]) ** 2).sum())
+        nonneg_violation = min(nonneg_violation, float(nn[c].min()))
+    ratio = err_nn / err_raw
+    emit("release/nonneg_error/synth20", post_s * 1e6,
+         f"weighted err ratio {ratio:.3f} (<=1 required)",
+         error_ratio=round(ratio, 4), min_cell=nonneg_violation,
+         raw_weighted_err=err_raw, nonneg_weighted_err=err_nn)
+
+    n_rows = 1_000_000
+    t0 = time.perf_counter()
+    recs = engine.synthesize(n_rows, jax.random.PRNGKey(1), tables=nn)
+    synth_s = time.perf_counter() - t0
+    report = synth_report(dom, nn, recs, total=total)
+    emit("release/synthesize/synth20", synth_s * 1e6,
+         f"{n_rows / synth_s:.0f} rows/s, max_tv={report.max_tv:.3f}",
+         completes=True, rows=n_rows,
+         rows_per_sec=round(n_rows / synth_s, 1),
+         max_tv=round(report.max_tv, 4),
+         peak_rss_mb=round(_peak_rss_mb(), 1))
+
+
+def run(fast: bool = True) -> None:
+    bench_cg_vs_dense(fast)
+    bench_synth20(fast)

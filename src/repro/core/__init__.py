@@ -10,9 +10,12 @@ from .select import (Plan, select, select_convex, select_max_variance,
 from .mechanism import (Measurement, exact_marginals_from_x, measure,
                         measure_np, measure_np_batched, pcost_of_plan,
                         residual_answer, signature_groups)
-from .reconstruct import (marginal_covariance_dense, marginal_variance,
-                          reconstruct_all, reconstruct_all_batched,
-                          reconstruct_marginal, reconstruct_marginal_fast)
+from .reconstruct import (cross_marginal_covariance_dense,
+                          embed_subset_answers, marginal_covariance_dense,
+                          marginal_variance, reconstruct_all,
+                          reconstruct_all_batched, reconstruct_marginal,
+                          reconstruct_marginal_fast, subset_slot_region,
+                          u_chain_factors)
 from .accountant import (PrivacyBudget, approx_dp_delta, approx_dp_eps,
                          gdp_mu, pcost_for_eps_delta, pcost_for_mu,
                          pcost_for_rho, zcdp_rho)

@@ -88,6 +88,22 @@ def kron_matvec_np(factors: Sequence[Factor], x: np.ndarray,
     return x.reshape(-1)
 
 
+def kron_matvec_np_batched(factors: Sequence[np.ndarray], x: np.ndarray,
+                           dims: Sequence[int]) -> np.ndarray:
+    """Batched host Kron chain: apply ``⊗_i factors[i]`` to every row of
+    ``x`` (B, Π dims) with numpy tensordots.
+
+    Deliberately dtype-preserving — the secure path routes int64 and object
+    (big-int) lanes through it; float callers cast their inputs first.
+    """
+    b = x.shape[0]
+    x = x.reshape((b,) + tuple(dims))
+    for axis, f in enumerate(factors):
+        x = np.moveaxis(np.tensordot(f, np.moveaxis(x, axis + 1, 0),
+                                     axes=([1], [0])), 0, axis + 1)
+    return x.reshape(b, -1)
+
+
 def kron_expand(factors: Sequence[np.ndarray]) -> np.ndarray:
     """Materialize a small Kronecker product (tests / tiny domains only)."""
     mats = [np.asarray(f, dtype=np.float64) for f in factors]

@@ -27,7 +27,9 @@ def corpus_marginal_release(domain: Domain, workload: MarginalWorkload,
                             pcost: float, key: jax.Array,
                             objective: str = "sum_of_variances",
                             mesh=None, secure: bool = False,
-                            digits: int = 4) -> Tuple[Dict, Dict, Dict]:
+                            digits: int = 4,
+                            postprocess: Optional[str] = None,
+                            mw_rounds: int = 0) -> Tuple[Dict, Dict, Dict]:
     """Select → (sharded) measure → reconstruct; charges the shared budget.
 
     ``secure=True`` releases through the numerically secure path (Alg 3,
@@ -36,6 +38,12 @@ def corpus_marginal_release(domain: Domain, workload: MarginalWorkload,
     budget charged the *exact* discrete pcost 2·Σ_A ρ_A
     (:func:`repro.core.discrete.discrete_pcost_of_plan` — never more than
     the continuous ``pcost_of_plan``, Thm 6).
+
+    ``postprocess`` is the sharded passthrough into the release subsystem
+    (docs/DESIGN.md §11): ``"consistent"`` / ``"nonneg"`` run the
+    covariance-weighted postprocessor on the reconstructed tables — pure
+    post-processing, so the privacy charge is unchanged; the secure path
+    pins the family total to the measured integer.
 
     Returns (noisy marginal tables, per-marginal variances, privacy report).
     """
@@ -48,5 +56,10 @@ def corpus_marginal_release(domain: Domain, workload: MarginalWorkload,
     meas = sharded_measure(plan, records, key, mesh, secure=secure,
                            digits=digits)
     tables = reconstruct_all(plan, meas)
+    if postprocess is not None:
+        from repro.release import measured_integer_total, postprocess_release
+        total = measured_integer_total(meas) if secure else None
+        tables = postprocess_release(plan, tables, postprocess, total=total,
+                                     mw_rounds=mw_rounds)
     variances = plan.workload_variances()
     return tables, variances, budget.report()

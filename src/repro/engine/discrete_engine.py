@@ -47,11 +47,11 @@ from repro.core.discrete import (DiscreteMeasurement, clique_gamma2,
                                  discrete_pcost_of_plan, h_factors,
                                  ypinv_factors)
 from repro.core.domain import Clique
-from repro.core.kron import kron_matvec_batched
+from repro.core.kron import kron_matvec_batched, kron_matvec_np_batched
 from repro.core.mechanism import noise_dtype, signature_groups
 from repro.core.plantable import BasePlan
 from repro.core.reconstruct import reconstruct_all_batched, u_chain_factors
-from repro.engine.engine import ChainRegistry, EngineStats
+from repro.engine.engine import ChainRegistry, EngineStats, ReleaseServing
 from repro.kernels.kron_matvec._layout import interpret_default
 from repro.kernels.kron_matvec.fused import fused_chain_matvec
 
@@ -59,16 +59,9 @@ from repro.kernels.kron_matvec.fused import fused_chain_matvec
 _MANTISSA_BITS = {"float32": 24, "float64": 53}
 
 
-def _np_chain_batched(factors: Sequence[np.ndarray], x: np.ndarray,
-                      dims: Sequence[int]) -> np.ndarray:
-    """Exact host fallback: one batched tensordot chain per group, any dtype
-    (int64 / object big-int / float64) — batched, never per clique."""
-    b = x.shape[0]
-    x = x.reshape((b,) + tuple(dims))
-    for axis, f in enumerate(factors):
-        x = np.moveaxis(np.tensordot(f, np.moveaxis(x, axis + 1, 0),
-                                     axes=([1], [0])), 0, axis + 1)
-    return x.reshape(b, -1)
+# Exact host fallback: one batched tensordot chain per group, any dtype
+# (int64 / object big-int / float64) — batched, never per clique.
+_np_chain_batched = kron_matvec_np_batched
 
 
 def as_np_rng(key) -> np.random.Generator:
@@ -88,7 +81,7 @@ def as_np_rng(key) -> np.random.Generator:
     return np.random.default_rng(np.random.SeedSequence(data.tolist()))
 
 
-class DiscreteEngine(ChainRegistry):
+class DiscreteEngine(ReleaseServing, ChainRegistry):
     """Compile a plan's secure-release chains once; serve Alg 3 traffic.
 
     Parameters
@@ -286,12 +279,12 @@ class DiscreteEngine(ChainRegistry):
         return reconstruct_all_batched(self.plan, measurements, cliques,
                                        use_kernel=self.use_kernel)
 
-    def release(self, marginals: Mapping[Clique, np.ndarray], key
-                ) -> Tuple[Dict[Clique, np.ndarray],
-                           Dict[Clique, DiscreteMeasurement]]:
-        """measure → reconstruct in one call; returns (tables, measurements)."""
-        meas = self.measure(marginals, key)
-        return self.reconstruct(meas), meas
+    # release()/synthesize() come from ReleaseServing; the secure path pins
+    # the consistency fit to the *measured integer total*, so postprocessed
+    # families preserve it integer-exactly (DESIGN.md §11).
+    def _postprocess_total(self, measurements) -> float:
+        from repro.release import measured_integer_total
+        return measured_integer_total(measurements)
 
     # ------------------------------------------------------------ accounting
     def rho(self) -> float:

@@ -15,8 +15,9 @@ Usage::
     engine = MarginalEngine(plan)
     meas   = engine.measure(marginals, key)      # one fused chain per signature
     tables = engine.reconstruct(meas)            # one fused chain per signature
-    # or end-to-end:
-    tables, meas = engine.release(marginals, key)
+    # or end-to-end (optionally through the release subsystem, §11):
+    tables, meas = engine.release(marginals, key, postprocess="nonneg")
+    records = engine.synthesize(1_000_000, key2)
 """
 from __future__ import annotations
 
@@ -50,6 +51,13 @@ class EngineStats:
     device_h_groups: int = 0       # H groups served by the device chain + rint
     exact_h_groups: int = 0        # H groups on the exact int64/big-int path
     host_y_groups: int = 0         # Y† groups on the float64 host fallback
+    # release subsystem (docs/DESIGN.md §11):
+    postprocess_calls: int = 0     # release(..., postprocess=...) invocations
+    synthesize_calls: int = 0      # synthesize(...) invocations
+    # sharded engine-cache provenance (engine/sharded.py): how often this
+    # engine was served from / constructed into the cross-call cache.
+    cache_hits: int = 0
+    cache_misses: int = 0
 
 
 class ChainRegistry:
@@ -86,7 +94,77 @@ class ChainRegistry:
         return rows
 
 
-class MarginalEngine(ChainRegistry):
+class ReleaseServing:
+    """release/postprocess/synthesize surface shared by all serving engines.
+
+    ``release(..., postprocess="consistent"|"nonneg")`` routes the raw
+    reconstruction through :mod:`repro.release` (docs/DESIGN.md §11):
+    covariance-weighted consistency (precision weights straight off the
+    plan's IR) and, for ``"nonneg"``, the signature-batched simplex
+    projection with exact total preservation.  ``synthesize`` samples
+    records from the last non-negative release (or explicit ``tables``).
+    Engines override ``_postprocess_total`` (the secure path pins the
+    measured integer total) and ``_check_postprocess`` (RP+ restricts to
+    identity-basis schemas).
+    """
+
+    _synth_tables: Optional[Dict[Clique, np.ndarray]] = None
+
+    def _postprocess_total(self, measurements) -> Optional[float]:
+        """Total-count pin for the consistency fit (None: fit it)."""
+        return None
+
+    def _check_postprocess(self) -> None:
+        """Raise when this plan family's tables are not plain marginals."""
+
+    def release(self, marginals, key, postprocess: Optional[str] = None,
+                total: Optional[float] = None, weights=None,
+                mw_rounds: int = 0, **post_opts):
+        """measure → reconstruct (→ postprocess); returns (tables, meas).
+
+        ``postprocess=None`` is the historical raw unbiased release;
+        ``"consistent"`` / ``"nonneg"`` run the release subsystem with
+        ``total``/``weights``/``mw_rounds`` forwarded to
+        :func:`repro.release.postprocess_release`.
+        """
+        meas = self.measure(marginals, key)
+        tables = self.reconstruct(meas)
+        if postprocess is not None:
+            self._check_postprocess()
+            from repro.release import postprocess_release
+            if total is None:
+                total = self._postprocess_total(meas)
+            tables = postprocess_release(self.plan, tables, postprocess,
+                                         total=total, weights=weights,
+                                         mw_rounds=mw_rounds, **post_opts)
+            self.stats.postprocess_calls += 1
+            if postprocess == "nonneg":
+                self._synth_tables = tables
+        return tables, meas
+
+    def synthesize(self, n_records: int, key, tables=None, order=None,
+                   batch: Optional[int] = None) -> np.ndarray:
+        """Sample (n_records, n_attrs) synthetic records from the marginals.
+
+        ``tables=None`` uses the engine's last ``postprocess="nonneg"``
+        release; junction-order conditional sampling is fully vectorized
+        (:func:`repro.release.synthesize_records`) and never touches the
+        contingency table.
+        """
+        if tables is None:
+            tables = self._synth_tables
+            if tables is None:
+                raise ValueError(
+                    "no non-negative release to sample from: call "
+                    "release(..., postprocess=\"nonneg\") first or pass "
+                    "tables=")
+        from repro.release import synthesize_records
+        self.stats.synthesize_calls += 1
+        return synthesize_records(self.plan.domain, tables, n_records, key,
+                                  order=order, batch=batch)
+
+
+class MarginalEngine(ReleaseServing, ChainRegistry):
     """Compile a plan's kernel chains once; serve measure/reconstruct traffic.
 
     Parameters
@@ -155,11 +233,7 @@ class MarginalEngine(ChainRegistry):
         return reconstruct_all_batched(self.plan, measurements, cliques,
                                        use_kernel=self.use_kernel)
 
-    def release(self, marginals: Mapping[Clique, jnp.ndarray], key: jax.Array
-                ) -> Tuple[Dict[Clique, np.ndarray], Dict[Clique, Measurement]]:
-        """measure → reconstruct in one call; returns (tables, measurements)."""
-        meas = self.measure(marginals, key)
-        return self.reconstruct(meas), meas
+    # release()/synthesize() come from ReleaseServing (postprocess-aware).
 
     # ------------------------------------------------------------- introspect
     def variances(self) -> Dict[Clique, float]:

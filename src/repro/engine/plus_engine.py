@@ -56,7 +56,7 @@ from repro.core.mechanism import Measurement, noise_dtype
 from repro.core.plus import (PlusPlan, measure_chain_split,
                              plus_signature_groups, t_chain_factors_plus)
 from repro.core.reconstruct import subset_slot_region
-from repro.engine.engine import ChainRegistry, EngineStats
+from repro.engine.engine import ChainRegistry, EngineStats, ReleaseServing
 from repro.kernels.kron_matvec._layout import interpret_default
 from repro.kernels.kron_matvec.fused import apply_epilogue, fused_chain_matvec
 from repro.kernels.kron_matvec.stats import CHAIN_STATS
@@ -78,7 +78,7 @@ def expand_range_axis(t: jnp.ndarray, axis: int, n: int) -> jnp.ndarray:
     return jnp.moveaxis(jnp.concatenate(parts, axis=-1), -1, axis)
 
 
-class PlusEngine(ChainRegistry):
+class PlusEngine(ReleaseServing, ChainRegistry):
     """Compile a PlusPlan's kernel chains once; serve Alg 5/6 traffic.
 
     Parameters
@@ -394,8 +394,16 @@ class PlusEngine(ChainRegistry):
                 out[c] = y[i]
         return out
 
-    def release(self, marginals: Mapping[Clique, jnp.ndarray], key: jax.Array
-                ) -> Tuple[Dict[Clique, np.ndarray], Dict[Clique, Measurement]]:
-        """measure → reconstruct in one call; returns (tables, measurements)."""
-        meas = self.measure(marginals, key)
-        return self.reconstruct(meas), meas
+    # release()/synthesize() come from ReleaseServing.  Postprocessing and
+    # synthesis operate on *marginal tables*: they are available exactly when
+    # every attribute basis is the identity (W_i = I, so Alg 6's answers ARE
+    # the marginals); generalized range/prefix answers are not a consistent-
+    # marginal family and are rejected up front.
+    def _check_postprocess(self) -> None:
+        bad = [i for i, b in enumerate(self.schema.bases)
+               if b.kind != "identity"]
+        if bad:
+            raise ValueError(
+                "postprocess/synthesize require identity-basis marginals; "
+                f"attributes {bad} use non-identity bases "
+                f"({[self.schema.bases[i].kind for i in bad]})")

@@ -16,6 +16,7 @@ branches on the concrete plan type.
 """
 from __future__ import annotations
 
+import os
 import weakref
 from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
@@ -32,6 +33,15 @@ from repro.core.mechanism import Measurement, noise_dtype
 from repro.core.plantable import BasePlan
 
 
+def _env_cache_size(default: int = 16) -> int:
+    """REPRO_ENGINE_CACHE_SIZE env override of the engine-cache capacity."""
+    raw = os.environ.get("REPRO_ENGINE_CACHE_SIZE", "")
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        return default
+
+
 class _EngineCache:
     """LRU cache of compiled serving engines, weak-safely keyed on the plan.
 
@@ -43,10 +53,20 @@ class _EngineCache:
     engines pin their plan (``engine.plan``), so entries normally leave via
     LRU eviction; the per-plan ``weakref.finalize`` additionally drops
     entries whose values don't pin the plan the moment it is collected.
+
+    Capacity is configurable: constructor arg, else the
+    ``REPRO_ENGINE_CACHE_SIZE`` environment variable, else 16.  ``hits`` /
+    ``misses`` aggregate across entries; each served engine's own
+    ``EngineStats`` additionally records its per-engine ``cache_hits`` /
+    ``cache_misses`` provenance.
     """
 
-    def __init__(self, maxsize: int = 16):
-        self.maxsize = maxsize
+    def __init__(self, maxsize: Optional[int] = None):
+        self.maxsize = _env_cache_size() if maxsize is None else int(maxsize)
+        if self.maxsize < 1:
+            raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
+        self.hits = 0
+        self.misses = 0
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._finalized: set = set()
 
@@ -66,12 +86,18 @@ class _EngineCache:
         key = self._key(plan, use_kernel, dtype, secure, digits)
         ent = self._entries.get(key)
         if ent is None:
+            self.misses += 1
             return None
         ref, engine = ent
         if ref() is not plan:          # id recycled: stale entry
             del self._entries[key]
+            self.misses += 1
             return None
         self._entries.move_to_end(key)
+        self.hits += 1
+        stats = getattr(engine, "stats", None)
+        if stats is not None:          # cache values are engines in serving;
+            stats.cache_hits += 1      # tests may stash sentinels
         return engine
 
     def put(self, plan, use_kernel: bool, dtype, engine,
@@ -92,7 +118,8 @@ class _EngineCache:
 
 # Engines cached per (plan, path, dtype, secure): repeated sharded_measure
 # calls on one plan reuse the jitted group transforms instead of re-tracing.
-_ENGINE_CACHE = _EngineCache(maxsize=16)
+# Capacity from REPRO_ENGINE_CACHE_SIZE (default 16).
+_ENGINE_CACHE = _EngineCache()
 
 
 def _engine_for(plan: BasePlan, use_kernel: bool, dtype,
@@ -101,6 +128,7 @@ def _engine_for(plan: BasePlan, use_kernel: bool, dtype,
     if eng is None:
         eng = plan.engine(use_kernel=use_kernel, precompile=False, dtype=dtype,
                           secure=secure, digits=digits)
+        eng.stats.cache_misses += 1
         _ENGINE_CACHE.put(plan, use_kernel, dtype, eng, secure, digits)
     return eng
 
@@ -113,8 +141,15 @@ def _clique_strides(domain: Domain, clique: Clique) -> Tuple[np.ndarray, int]:
     return strides, int(np.prod(sizes)) if clique else 1
 
 
-def _local_marginal(records, cols, strides, n_cells, dtype=jnp.float32):
-    """One-hot-matmul histogram of the clique columns (records: (N, n_attrs))."""
+def _local_marginal(records, cols, strides, n_cells, dtype=None):
+    """One-hot-matmul histogram of the clique columns (records: (N, n_attrs)).
+
+    ``dtype=None`` resolves to :func:`repro.core.mechanism.noise_dtype` —
+    the historical hard-coded float32 default silently capped histogram
+    exactness at 2²⁴ counts per cell even when the engine path threaded
+    float64 everywhere else.
+    """
+    dtype = noise_dtype() if dtype is None else dtype
     if len(cols) == 0:
         return jnp.asarray([records.shape[0]], dtype)
     flat = jnp.zeros((records.shape[0],), jnp.int32)

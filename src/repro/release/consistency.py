@@ -1,0 +1,434 @@
+r"""Covariance-weighted consistency across overlapping noisy marginals.
+
+The release subsystem's first stage (docs/DESIGN.md §11).  Given noisy
+marginal tables ``y_A`` for the workload cliques — the engines' own raw
+release, or any externally perturbed family (e.g. after per-marginal
+non-negativity projection, which breaks mutual consistency) — find the
+*mutually consistent* family closest to them in the covariance-weighted
+least-squares sense.
+
+**Parameterization.**  A family of marginals over the workload is mutually
+consistent iff it is the image of residual coordinates: with
+``T_i = [Sub_{n_i}^† | (1/n_i)·1]`` (the merged reconstruction factors of
+``core/reconstruct.py``) and the slot embedding ``E_A`` that places each
+``r_{A'}``, A' ⊆ A, into its disjoint slot region,
+
+    q_A(r) = (⊗_{i∈A} T_i) · E_A · r .
+
+So consistency is an *unconstrained* WLS over r — never over the
+``Π n_i``-sized contingency table:
+
+    min_r  Σ_{A∈W} w_A ‖ c_A ⊙ (q_A(r) − y_A) ‖²                       (*)
+
+with per-marginal precision weights ``w_A = Imp_A / Var_A`` straight off the
+PlanTable IR (Thm 4/8 — the "covariance weighting") and optional per-cell
+weights ``c_A``.
+
+**Normal equations on the IR.**  M r = b with
+``M = Σ_A w_A E_Aᵀ K_Aᵀ C_A K_A E_A``, ``K_A = ⊗T_i``.  Both the forward and
+adjoint maps are signature-batched Kronecker chains over gather/scatter index
+arrays — the exact machinery the serving engines use, jitted per group.
+
+**The Kron-factored preconditioner.**  ``Sub^†`` has zero column sums, so for
+uniform per-cell weights the cross-subset blocks of ``K_AᵀK_A`` vanish and M
+is *block-diagonal* over the closure:
+
+    M_{A'} = α_{A'} · ⊗_{i∈A'} (Sub_i^†ᵀ Sub_i^†),
+    α_{A'} = Σ_{A ⊇ A'} w_A · Π_{i∈A∖A'} 1/n_i .
+
+``block_jacobi`` applies the exact inverse of that block structure (tiny
+per-axis inverses, batched chains), so the preconditioned CG converges in one
+iteration for per-marginal weights and stays correct — with a short CG tail —
+for per-cell weight overrides, where the decoupling genuinely breaks.
+
+``dense_wls_oracle`` materializes the design matrix and solves the normal
+equations in fp64 — the small-domain reference the tests and the
+``release-bench`` CI gate compare against.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domain import Clique, subsets
+from repro.core.kron import (kron_expand, kron_matvec_batched,
+                             kron_matvec_np_batched)
+from repro.core.mechanism import noise_dtype, signature_groups
+from repro.core.plantable import BasePlan
+from repro.core.reconstruct import subset_slot_region, u_chain_factors
+from repro.core.residual import sub_pinv
+
+
+def precision_weights(plan: BasePlan) -> np.ndarray:
+    """Per-marginal WLS weights w_A = Imp_A / Var_A from the IR (Thm 4/8).
+
+    For plain tables ``Var_A`` is the per-cell variance; RP+ identity-basis
+    tables report the Thm-8 SoV convention — any positive per-marginal
+    weighting yields a valid consistent WLS fit, only the distribution of the
+    disagreement across marginals changes.
+    """
+    var = np.asarray(plan.variances_array(), np.float64)
+    imp = np.asarray(plan.workload.weight_array(), np.float64)
+    return imp / np.maximum(var, 1e-300)
+
+
+def _chain_np(factors: Sequence[np.ndarray], x: np.ndarray,
+              dims: Sequence[int]) -> np.ndarray:
+    """Batched host-fp64 Kronecker chain (B, Π dims) → (B, Π out)."""
+    return kron_matvec_np_batched([np.asarray(f, np.float64) for f in factors],
+                                  np.asarray(x, np.float64), dims)
+
+
+@dataclass
+class _WorkGroup:
+    """One workload signature group of the WLS operator."""
+
+    dims: Tuple[int, ...]
+    cliques: List[Clique]
+    idx: np.ndarray              # (g, Π n_i) flat-r index of every slot
+    w: np.ndarray                # (g,) per-marginal precision weights
+    cw: Optional[np.ndarray]     # (g, Π n_i) per-cell weights, or None
+    factors: List[np.ndarray]    # T_i per axis
+
+
+@dataclass
+class _ClosureGroup:
+    """One closure signature group of the block-Jacobi preconditioner."""
+
+    rdims: Tuple[int, ...]       # per-axis residual sizes n_i − 1
+    ridx: np.ndarray             # (g, Π rdims) flat-r index of every coord
+    alpha: np.ndarray            # (g,) block scalars α_{A'}
+    ginv: List[np.ndarray]       # (Sub†ᵀSub†)⁻¹ per axis
+
+
+class ConsistencyOperator:
+    """The WLS normal-equations operator M (and rhs/preconditioner) of (*).
+
+    Built once per (plan, weights); ``solve`` runs the preconditioned CG on
+    device (jitted batched chains) or on the host in fp64.
+    """
+
+    def __init__(self, plan: BasePlan, weights: Optional[np.ndarray] = None,
+                 cell_weights: Optional[Mapping[Clique, np.ndarray]] = None):
+        self.plan = plan
+        dom = plan.domain
+        wk = list(plan.workload.cliques)
+        w = precision_weights(plan) if weights is None \
+            else np.asarray(weights, np.float64)
+        if w.shape != (len(wk),):
+            raise ValueError(f"weights must have shape ({len(wk)},)")
+        if not np.all(w > 0):
+            raise ValueError("precision weights must be strictly positive")
+        self.weights = w
+        # flat residual-coordinate layout over the closure
+        self.offsets: Dict[Clique, int] = {}
+        off = 0
+        for c in plan.cliques:
+            self.offsets[c] = off
+            off += dom.residual_size(c)
+        self.n_coords = off
+        wpos = {c: i for i, c in enumerate(wk)}
+        self.groups: List[_WorkGroup] = []
+        for dims, cliques in signature_groups(dom, wk).items():
+            idx = np.stack([self._slot_index(c) for c in cliques])
+            cw = None
+            if cell_weights:
+                cw = np.ones_like(idx, np.float64)
+                for i, c in enumerate(cliques):
+                    if c in cell_weights:
+                        cw[i] = np.asarray(cell_weights[c],
+                                           np.float64).reshape(-1)
+                if not np.all(cw >= 0):
+                    raise ValueError("cell weights must be non-negative")
+            self.groups.append(_WorkGroup(
+                dims, list(cliques), idx, w[[wpos[c] for c in cliques]], cw,
+                u_chain_factors(dom, cliques[0]) if dims else []))
+        # block-Jacobi: α_{A'} over the closure + per-axis Gram inverses
+        alpha = np.zeros(len(plan.cliques))
+        cpos = {c: i for i, c in enumerate(plan.cliques)}
+        sizes = dom.sizes
+        for wi, a in enumerate(wk):
+            for sub in subsets(a):
+                rest = set(a) - set(sub)
+                alpha[cpos[sub]] += w[wi] * math.prod(
+                    1.0 / sizes[i] for i in rest)
+        self.pregroups: List[_ClosureGroup] = []
+        for dims, cliques in signature_groups(dom, plan.cliques).items():
+            rdims = tuple(n - 1 for n in dims)
+            rsz = int(np.prod(rdims)) if rdims else 1
+            ridx = np.stack([self.offsets[c] + np.arange(rsz)
+                             for c in cliques])
+            ginv = [np.linalg.inv(sub_pinv(n).T @ sub_pinv(n)) for n in dims]
+            self.pregroups.append(_ClosureGroup(
+                rdims, ridx, alpha[[cpos[c] for c in cliques]], ginv))
+        self._device: dict = {}
+
+    def _slot_index(self, clique: Clique) -> np.ndarray:
+        """Flat-r index of every slot position of ``clique``'s merged tensor."""
+        sizes = self.plan.domain.clique_sizes(clique)
+        t = np.empty(sizes if sizes else (1,), np.int64)
+        for sub in subsets(clique):
+            region, shape = subset_slot_region(clique, sub, sizes)
+            rsz = self.plan.domain.residual_size(sub)
+            block = (self.offsets[sub] + np.arange(rsz)).reshape(
+                shape if sizes else (1,))
+            if sizes:
+                t[region] = block
+            else:
+                t[:] = block
+        return t.reshape(-1)
+
+    # ------------------------------------------------------------- host fp64
+    def matvec_np(self, r: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.n_coords)
+        for g in self.groups:
+            q = _chain_np(g.factors, r[g.idx], g.dims)
+            s = g.w[:, None] * q
+            if g.cw is not None:
+                s = s * g.cw
+            back = _chain_np([f.T for f in g.factors], s, g.dims)
+            out += np.bincount(g.idx.ravel(), weights=back.ravel(),
+                               minlength=self.n_coords)
+        return out
+
+    def rhs_np(self, tables: Mapping[Clique, np.ndarray]) -> np.ndarray:
+        out = np.zeros(self.n_coords)
+        for g in self.groups:
+            y = np.stack([np.asarray(tables[c], np.float64).reshape(-1)
+                          for c in g.cliques])
+            s = g.w[:, None] * y
+            if g.cw is not None:
+                s = s * g.cw
+            back = _chain_np([f.T for f in g.factors], s, g.dims)
+            out += np.bincount(g.idx.ravel(), weights=back.ravel(),
+                               minlength=self.n_coords)
+        return out
+
+    def precond_np(self, s: np.ndarray) -> np.ndarray:
+        out = np.zeros(self.n_coords)
+        for g in self.pregroups:
+            z = _chain_np(g.ginv, s[g.ridx], g.rdims) / g.alpha[:, None]
+            out += np.bincount(g.ridx.ravel(), weights=z.ravel(),
+                               minlength=self.n_coords)
+        return out
+
+    # ---------------------------------------------------------------- device
+    def _device_fns(self, dtype):
+        """Jitted (matvec, precond) over the batched chains, cached per dtype."""
+        key = jnp.dtype(dtype).name
+        ent = self._device.get(key)
+        if ent is not None:
+            return ent
+        wg = [(tuple(g.dims),
+               jnp.asarray(g.idx, jnp.int32),
+               jnp.asarray(g.w, dtype),
+               None if g.cw is None else jnp.asarray(g.cw, dtype),
+               [jnp.asarray(f, dtype) for f in g.factors],
+               [jnp.asarray(f.T, dtype) for f in g.factors])
+              for g in self.groups]
+        pg = [(tuple(g.rdims),
+               jnp.asarray(g.ridx, jnp.int32),
+               jnp.asarray(g.alpha, dtype),
+               [jnp.asarray(f, dtype) for f in g.ginv])
+              for g in self.pregroups]
+        n = self.n_coords
+
+        def matvec(r):
+            out = jnp.zeros(n, dtype)
+            for dims, idx, w, cw, facs, facs_t in wg:
+                q = kron_matvec_batched(facs, r[idx], dims)
+                s = w[:, None] * q
+                if cw is not None:
+                    s = s * cw
+                back = kron_matvec_batched(facs_t, s, dims)
+                out = out.at[idx].add(back.reshape(idx.shape))
+            return out
+
+        def precond(s):
+            out = jnp.zeros(n, dtype)
+            for rdims, ridx, alpha, ginv in pg:
+                z = kron_matvec_batched(ginv, s[ridx], rdims)
+                z = z / alpha[:, None]
+                out = out.at[ridx].add(z.reshape(ridx.shape))
+            return out
+
+        ent = (jax.jit(matvec), jax.jit(precond))
+        self._device[key] = ent
+        return ent
+
+    # -------------------------------------------------------------- marginals
+    def marginals_np(self, r: np.ndarray,
+                     cliques: Optional[Sequence[Clique]] = None
+                     ) -> Dict[Clique, np.ndarray]:
+        """q_A(r) for the workload cliques (or any cliques in the closure)."""
+        out: Dict[Clique, np.ndarray] = {}
+        if cliques is None:
+            for g in self.groups:
+                q = _chain_np(g.factors, r[g.idx], g.dims)
+                for i, c in enumerate(g.cliques):
+                    out[c] = q[i]
+            return out
+        dom = self.plan.domain
+        for c in cliques:
+            idx = self._slot_index(c)
+            q = _chain_np(u_chain_factors(dom, c) if c else [],
+                          r[idx][None, :], dom.clique_sizes(c))
+            out[c] = q[0]
+        return out
+
+
+@dataclass
+class ConsistentRelease:
+    """A consistent family of marginals: residual coordinates + provenance."""
+
+    operator: ConsistencyOperator = field(repr=False)
+    r: np.ndarray                # (n_coords,) fitted residual coordinates
+    iterations: int
+    rel_residual: float          # ‖Mr − b‖ / ‖b‖ at exit
+
+    @property
+    def plan(self) -> BasePlan:
+        return self.operator.plan
+
+    @property
+    def total(self) -> float:
+        """The common total count of every marginal in the family."""
+        return float(self.r[self.operator.offsets[()]])
+
+    def marginals(self, cliques: Optional[Sequence[Clique]] = None
+                  ) -> Dict[Clique, np.ndarray]:
+        return self.operator.marginals_np(self.r, cliques)
+
+    def marginal(self, clique: Clique) -> np.ndarray:
+        return self.operator.marginals_np(self.r, [clique])[clique]
+
+
+def solve_consistency(plan: BasePlan, tables: Mapping[Clique, np.ndarray],
+                      *, weights: Optional[np.ndarray] = None,
+                      cell_weights: Optional[Mapping[Clique, np.ndarray]] = None,
+                      fix_total: Optional[float] = None,
+                      tol: float = 1e-9, maxiter: int = 200,
+                      backend: str = "device", dtype=None,
+                      operator: Optional[ConsistencyOperator] = None
+                      ) -> ConsistentRelease:
+    """Preconditioned-CG solve of the consistency WLS (*).
+
+    ``backend="device"`` runs the jitted batched chains at ``dtype``
+    (default :func:`repro.core.mechanism.noise_dtype`); ``"host"`` runs the
+    same operator in numpy fp64.  ``fix_total`` pins the empty-clique
+    coordinate — the family's common total — to an exact value (the secure
+    path passes the measured integer total here); the CG then solves the
+    reduced system in the complementary subspace.
+    """
+    op = ConsistencyOperator(plan, weights, cell_weights) \
+        if operator is None else operator
+    if backend == "host":
+        mv, pc = op.matvec_np, op.precond_np
+        xp = np
+        b = op.rhs_np(tables)
+    elif backend == "device":
+        dtype = noise_dtype() if dtype is None else dtype
+        mv, pc = op._device_fns(dtype)
+        xp = jnp
+        b = jnp.asarray(op.rhs_np(tables), dtype)
+    else:
+        raise ValueError(f"backend must be 'device' or 'host', got {backend!r}")
+
+    e0 = op.offsets[()]
+    if fix_total is not None:
+        # Pin r_∅ = t0 and solve the reduced system in the complement: every
+        # CG direction is masked at e0, the pinned coordinate enters via b.
+        t0 = float(fix_total)
+        mask_np = np.ones(op.n_coords)
+        mask_np[e0] = 0.0
+        unit_np = np.zeros(op.n_coords)
+        unit_np[e0] = t0
+        mask = mask_np if xp is np else jnp.asarray(mask_np, b.dtype)
+        unit = unit_np if xp is np else jnp.asarray(unit_np, b.dtype)
+        b = mask * (b - mv(unit))
+        x = unit
+
+        def amv(p):
+            return mask * mv(mask * p)
+
+        def apc(s):
+            return mask * pc(mask * s)
+    else:
+        x = np.zeros(op.n_coords) if xp is np else jnp.zeros(op.n_coords,
+                                                             b.dtype)
+        amv, apc = mv, pc
+
+    bnorm = float(xp.sqrt(xp.vdot(b, b)))
+    if bnorm == 0.0:
+        return ConsistentRelease(op, np.asarray(x, np.float64), 0, 0.0)
+    resid = b       # the CG correction starts at zero in both branches
+    z = apc(resid)
+    p = z
+    rz = float(xp.vdot(resid, z))
+    it = 0
+    rel = 1.0
+    for it in range(1, maxiter + 1):
+        ap = amv(p)
+        pap = float(xp.vdot(p, ap))
+        if pap <= 0:
+            break
+        step = rz / pap
+        x = x + step * p
+        resid = resid - step * ap
+        rel = float(xp.sqrt(xp.vdot(resid, resid))) / bnorm
+        if rel <= tol:
+            break
+        z = apc(resid)
+        rz_new = float(xp.vdot(resid, z))
+        p = z + (rz_new / rz) * p
+        rz = rz_new
+    return ConsistentRelease(op, np.asarray(x, np.float64), it, rel)
+
+
+def dense_wls_oracle(plan: BasePlan, tables: Mapping[Clique, np.ndarray],
+                     *, weights: Optional[np.ndarray] = None,
+                     cell_weights: Optional[Mapping[Clique, np.ndarray]] = None,
+                     fix_total: Optional[float] = None) -> ConsistentRelease:
+    """fp64 dense WLS reference: materialize the design, solve the normal
+    equations with LAPACK.  Small domains only (design is Σ|cells| × n_coords)."""
+    op = ConsistencyOperator(plan, weights, cell_weights)
+    dom = plan.domain
+    wk = list(plan.workload.cliques)
+    w = op.weights
+    rows = sum(dom.n_cells(c) for c in wk)
+    design = np.zeros((rows, op.n_coords))
+    wrow = np.empty(rows)
+    y = np.empty(rows)
+    r0 = 0
+    cellw = dict(cell_weights) if cell_weights else {}
+    for wi, c in enumerate(wk):
+        m = dom.n_cells(c)
+        k = kron_expand(u_chain_factors(dom, c)) if c else np.ones((1, 1))
+        design[r0:r0 + m, op._slot_index(c)] = k
+        cw = np.asarray(cellw[c], np.float64).reshape(-1) if c in cellw \
+            else np.ones(m)
+        wrow[r0:r0 + m] = w[wi] * cw
+        y[r0:r0 + m] = np.asarray(tables[c], np.float64).reshape(-1)
+        r0 += m
+    m_mat = design.T @ (wrow[:, None] * design)
+    b = design.T @ (wrow * y)
+    e0 = op.offsets[()]
+    if fix_total is not None:
+        free = np.ones(op.n_coords, bool)
+        free[e0] = False
+        r = np.empty(op.n_coords)
+        r[e0] = float(fix_total)
+        r[free] = np.linalg.solve(
+            m_mat[np.ix_(free, free)],
+            b[free] - m_mat[free, e0] * float(fix_total))
+    else:
+        r = np.linalg.solve(m_mat, b)
+    resid = m_mat @ r - b
+    bn = float(np.linalg.norm(b)) or 1.0
+    return ConsistentRelease(op, r, 0, float(np.linalg.norm(resid)) / bn)

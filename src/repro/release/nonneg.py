@@ -1,0 +1,202 @@
+r"""ReM-style local non-negativity for released marginals (DESIGN.md §11).
+
+Raw unbiased releases are frequently negative in small cells; downstream
+consumers (contingency analysis, Bayesian networks, synthetic data) need
+non-negative tables.  Following the local-reconstruction observation of
+"Efficient and Private Marginal Reconstruction with Local Non-Negativity"
+(Mullins et al., 2024), non-negativity is enforced *per marginal* — each
+table is projected onto its own scaled simplex
+
+    Δ_A(T) = { q ≥ 0 : Σ q = T }
+
+with T the family's common total count, so the projection never touches the
+contingency table and runs at Synth-10^20 scale.  Projections are
+signature-batched exactly like the serving engines: same-shape marginals
+stack into one vectorized sort-based projection (jitted on device, fp64 on
+host).
+
+Per-marginal projection breaks mutual consistency; ``nonneg_release``
+therefore runs consistency → projection, and optionally a multiplicative-
+weights refinement loop over the workload cliques: each round re-fits the
+covariance-weighted consistent family to the current non-negative tables
+(:func:`repro.release.consistency.solve_consistency`) and pulls every
+marginal toward it with an entropic (multiplicative, hence positivity- and
+total-preserving) step — the classic MW dynamics on each simplex.
+
+Totals are preserved *exactly* in fp64 (the secure discrete path hands an
+integer total down): after projection the residual rounding defect is folded
+into the largest cell, so ``q.sum() == T`` to the last ulp.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domain import Clique, Domain
+from repro.core.mechanism import signature_groups
+from repro.core.plantable import BasePlan
+
+from .consistency import solve_consistency
+
+
+def _simplex_rows_np(y: np.ndarray, total: np.ndarray) -> np.ndarray:
+    """Euclidean projection of every row of ``y`` onto Δ(total_i), fp64.
+
+    Sort-based: q = max(y − τ, 0) with τ from the largest prefix keeping the
+    active set positive (Held–Wolfe–Crowder).  Rows with total ≤ 0 project to
+    zero.
+    """
+    y = np.asarray(y, np.float64)
+    total = np.asarray(total, np.float64)
+    g, m = y.shape
+    u = -np.sort(-y, axis=1)
+    css = np.cumsum(u, axis=1)
+    j = np.arange(1, m + 1)
+    rho = np.sum(u * j > css - total[:, None], axis=1)
+    rho = np.maximum(rho, 1)
+    tau = (css[np.arange(g), rho - 1] - total) / rho
+    q = np.maximum(y - tau[:, None], 0.0)
+    return np.where(total[:, None] > 0, q, 0.0)
+
+
+@jax.jit
+def _simplex_rows_jnp(y: jnp.ndarray, total: jnp.ndarray) -> jnp.ndarray:
+    """Device twin of :func:`_simplex_rows_np` (one jit per row shape)."""
+    g, m = y.shape
+    u = -jnp.sort(-y, axis=1)
+    css = jnp.cumsum(u, axis=1)
+    j = jnp.arange(1, m + 1)
+    rho = jnp.maximum(jnp.sum(u * j > css - total[:, None], axis=1), 1)
+    tau = (jnp.take_along_axis(css, rho[:, None] - 1, axis=1)[:, 0]
+           - total) / rho
+    q = jnp.maximum(y - tau[:, None], 0.0)
+    return jnp.where(total[:, None] > 0, q, 0.0)
+
+
+def simplex_project_batch(y: np.ndarray, total, backend: str = "device"
+                          ) -> np.ndarray:
+    """Project a (g, m) stack of tables onto their scaled simplices."""
+    total = np.broadcast_to(np.asarray(total, np.float64), (y.shape[0],))
+    if backend == "device":
+        yj = jnp.asarray(y)
+        return np.asarray(_simplex_rows_jnp(yj, jnp.asarray(total, yj.dtype)),
+                          np.float64)
+    return _simplex_rows_np(y, total)
+
+
+def _exact_total(q: np.ndarray, total: float) -> np.ndarray:
+    """Fold the fp rounding defect back into the table: Σq == total.
+
+    Iterates against the consumer's own reduction (``q.sum()``); when the
+    defect drops below the largest cell's ulp it is folded into a smaller
+    cell instead.  The fixed point Σq == total is reached in a pass or two
+    in practice; the worst case is one ulp of the total — in particular
+    integer totals always round-trip exactly through ``round(q.sum())``.
+    """
+    q = np.asarray(q, np.float64)
+    if total <= 0:
+        return np.zeros_like(q)
+    i = int(np.argmax(q))
+    for _ in range(16):
+        d = total - float(q.sum())     # the same reduction consumers run
+        if d == 0.0:
+            break
+        j, nq = i, max(q[i] + d, 0.0)
+        if nq == q[i]:     # defect below this cell's ulp: use a smaller cell
+            pos = np.nonzero((q > 0) & (np.spacing(q) <= abs(d)))[0]
+            if len(pos) == 0:
+                break
+            j = int(pos[np.argmin(q[pos])])
+            nq = max(q[j] + d, 0.0)
+            if nq == q[j]:
+                break
+        q[j] = nq
+    return q
+
+
+def project_nonneg(domain: Domain, tables: Mapping[Clique, np.ndarray],
+                   total: float, backend: str = "device",
+                   exact_total: bool = True) -> Dict[Clique, np.ndarray]:
+    """Local non-negativity: signature-batched per-marginal simplex projection.
+
+    Purely local (does not restore consistency); the serving entry point is
+    :func:`nonneg_release`.
+    """
+    cliques = list(tables.keys())
+    out: Dict[Clique, np.ndarray] = {}
+    for dims, group in signature_groups(domain, cliques).items():
+        y = np.stack([np.asarray(tables[c], np.float64).reshape(-1)
+                      for c in group])
+        q = simplex_project_batch(y, total, backend)
+        for i, c in enumerate(group):
+            out[c] = _exact_total(q[i], total) if exact_total else q[i]
+    return out
+
+
+def mw_refine(plan: BasePlan, tables: Dict[Clique, np.ndarray], total: float,
+              rounds: int, eta: float = 0.5,
+              weights: Optional[np.ndarray] = None,
+              backend: str = "device") -> Dict[Clique, np.ndarray]:
+    """Multiplicative-weights refinement over the workload cliques.
+
+    Each round re-fits the covariance-weighted consistent family to the
+    current non-negative tables and takes an entropic step toward it:
+    ``q ← q · exp(η (target − q)/s)`` rescaled back to total T — positive and
+    total-preserving by construction, converging toward the intersection of
+    the simplices with the consistent family.
+    """
+    if total <= 0 or rounds <= 0:
+        return tables
+    scale = max(total / max(np.mean([t.size for t in tables.values()]), 1.0),
+                1e-12)
+    q = {c: np.asarray(t, np.float64).copy() for c, t in tables.items()}
+    floor = 1e-9 * scale
+    for _ in range(rounds):
+        cons = solve_consistency(plan, q, weights=weights, fix_total=total,
+                                 backend=backend)
+        target = cons.marginals()
+        for c in q:
+            cur = np.maximum(q[c], floor)
+            step = np.clip(eta * (target[c] - cur) / scale, -40.0, 40.0)
+            nxt = cur * np.exp(step)
+            s = nxt.sum()
+            q[c] = _exact_total(nxt * (total / s) if s > 0 else nxt, total)
+    return q
+
+
+def nonneg_release(plan: BasePlan, tables: Mapping[Clique, np.ndarray],
+                   *, total: Optional[float] = None,
+                   weights: Optional[np.ndarray] = None,
+                   cell_weights: Optional[Mapping[Clique, np.ndarray]] = None,
+                   mw_rounds: int = 0, eta: float = 0.5,
+                   tol: float = 1e-9, maxiter: int = 200,
+                   backend: str = "device",
+                   cliques: Optional[Sequence[Clique]] = None
+                   ) -> Dict[Clique, np.ndarray]:
+    """Consistency → local non-negativity (→ optional MW refinement).
+
+    The serving postprocessor behind ``engine.release(postprocess="nonneg")``:
+    covariance-weighted consistent fit (CG on the residual coordinates,
+    ``fix_total`` pinning when ``total`` is given — the secure path passes the
+    measured *integer* total), then the signature-batched simplex projection,
+    then ``mw_rounds`` rounds of multiplicative-weights refinement.  Every
+    returned table is non-negative and sums to the common total to within
+    one ulp (integer totals round-trip exactly through ``round``).
+    """
+    cons = solve_consistency(plan, tables, weights=weights,
+                             cell_weights=cell_weights, fix_total=total,
+                             tol=tol, maxiter=maxiter, backend=backend)
+    t = float(total) if total is not None else cons.total
+    t = max(t, 0.0)
+    q = cons.marginals()       # full workload: MW re-fits need every marginal
+    q = project_nonneg(plan.domain, q, t, backend=backend)
+    if mw_rounds:
+        q = mw_refine(plan, q, t, mw_rounds, eta, weights, backend)
+    if cliques is not None:
+        q = {c: q[c] for c in cliques}
+    return q

@@ -1,0 +1,269 @@
+"""Release subsystem (docs/DESIGN.md §11): consistency, non-negativity, synth.
+
+The consistency solver is validated against the fp64 dense WLS oracle (both
+for per-marginal precision weights, where the normal equations are block-
+diagonal and the preconditioned CG converges in one iteration, and for
+per-cell weight overrides, where the decoupling breaks and the CG genuinely
+iterates); non-negativity and totals are property-tested; synthesis is
+χ²-checked against the released marginals on a tree workload, where junction
+sampling is exact.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (Domain, MarginalWorkload, all_kway, measure_np,
+                        reconstruct_all, select)
+from repro.core.mechanism import exact_marginals_from_x
+from repro.release import (dense_wls_oracle, junction_order, mw_refine,
+                           nonneg_release, postprocess_release,
+                           precision_weights, project_nonneg,
+                           simplex_project_batch, solve_consistency,
+                           synth_report, synthesize_records)
+
+
+def _setup(sizes, seed=0, kmax=2, pcost=1.0, workload=None):
+    dom = Domain.create(list(sizes))
+    wk = all_kway(dom, min(kmax, dom.n_attrs), include_lower=True) \
+        if workload is None else workload
+    plan = select(wk, pcost_budget=pcost)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 40, dom.universe_size()).astype(np.float64)
+    margs = exact_marginals_from_x(dom, plan.cliques, x)
+    meas = measure_np(plan, margs, rng)
+    tables = reconstruct_all(plan, meas)
+    return dom, wk, plan, x, tables, rng
+
+
+def _perturb(tables, rng, scale=5.0):
+    return {c: t + rng.normal(0, scale, t.shape) for c, t in tables.items()}
+
+
+def _assert_total(t, total):
+    """Total preserved to within one ulp; integer totals round-trip exactly."""
+    assert abs(t.sum() - total) <= 2 * np.spacing(max(abs(total), 1.0))
+    if float(total).is_integer():
+        assert round(float(t.sum())) == int(total)
+
+
+# ---------------------------------------------------------------- consistency
+
+def test_cg_matches_dense_oracle():
+    _, wk, plan, _, tables, rng = _setup([3, 4, 2, 3])
+    pert = _perturb(tables, rng)
+    cg = solve_consistency(plan, pert, backend="host")
+    dense = dense_wls_oracle(plan, pert)
+    np.testing.assert_allclose(cg.r, dense.r, rtol=1e-9, atol=1e-9)
+    # the fitted family is mutually consistent: shared sub-marginals agree
+    fit = cg.marginals()
+    m01 = fit[(0, 1)].reshape(3, 4)
+    m12 = fit[(1, 2)].reshape(4, 2)
+    np.testing.assert_allclose(m01.sum(axis=0), m12.sum(axis=1), atol=1e-8)
+
+
+def test_cg_single_iteration_with_marginal_weights():
+    """Per-marginal precision weights: M is block-diagonal over the closure,
+    the Kron-factored preconditioner is exact, CG converges in 1 step."""
+    _, _, plan, _, tables, rng = _setup([3, 4, 2, 3])
+    cg = solve_consistency(plan, _perturb(tables, rng), backend="host")
+    assert cg.iterations <= 2
+    assert cg.rel_residual < 1e-9
+
+
+def test_cg_cell_weights_vs_oracle():
+    """Per-cell weights break the block-diagonal decoupling: CG must iterate
+    and still reach the dense WLS optimum."""
+    _, wk, plan, _, tables, rng = _setup([3, 4, 2])
+    pert = _perturb(tables, rng)
+    cw = {c: rng.uniform(0.2, 2.0, tables[c].size) for c in wk.cliques}
+    cg = solve_consistency(plan, pert, cell_weights=cw, backend="host",
+                           tol=1e-12, maxiter=500)
+    dense = dense_wls_oracle(plan, pert, cell_weights=cw)
+    assert cg.iterations > 2
+    scale = max(1.0, float(np.abs(dense.r).max()))
+    np.testing.assert_allclose(cg.r / scale, dense.r / scale, atol=1e-8)
+
+
+def test_device_backend_matches_host():
+    _, _, plan, _, tables, rng = _setup([3, 4, 2, 3])
+    pert = _perturb(tables, rng)
+    host = solve_consistency(plan, pert, backend="host")
+    dev = solve_consistency(plan, pert, backend="device")
+    scale = max(1.0, float(np.abs(host.r).max()))
+    np.testing.assert_allclose(dev.r / scale, host.r / scale, atol=5e-5)
+
+
+def test_fix_total_pins_every_marginal_sum():
+    _, wk, plan, _, tables, rng = _setup([3, 4, 2])
+    cg = solve_consistency(plan, _perturb(tables, rng), fix_total=1234.0,
+                           backend="host")
+    assert cg.total == 1234.0
+    for c, q in cg.marginals().items():
+        assert abs(q.sum() - 1234.0) < 1e-6 * 1234.0
+    dense = dense_wls_oracle(plan, _perturb(tables, rng), fix_total=777.0)
+    assert dense.total == 777.0
+
+
+def test_consistency_weight_validation():
+    _, wk, plan, _, tables, _ = _setup([3, 4])
+    with pytest.raises(ValueError):
+        solve_consistency(plan, tables, weights=np.zeros(len(wk.cliques)))
+    with pytest.raises(ValueError):
+        solve_consistency(plan, tables, weights=np.ones(len(wk.cliques) + 1))
+    with pytest.raises(ValueError):
+        solve_consistency(plan, tables, backend="nope")
+    assert np.all(precision_weights(plan) > 0)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.lists(st.integers(2, 4), min_size=2, max_size=4),
+       st.integers(0, 10 ** 6))
+def test_idempotent_on_consistent_inputs(sizes, seed):
+    """Engine reconstructions are already mutually consistent — the WLS fit
+    must return them unchanged (the fit residual is exactly zero)."""
+    _, wk, plan, _, tables, _ = _setup(sizes, seed=seed)
+    cons = solve_consistency(plan, tables, backend="host")
+    fit = cons.marginals()
+    scale = max(1.0, max(float(np.abs(t).max()) for t in tables.values()))
+    for c in wk.cliques:
+        np.testing.assert_allclose(fit[c] / scale, tables[c] / scale,
+                                   atol=1e-9)
+
+
+# ------------------------------------------------------------- non-negativity
+
+def test_simplex_projection_matches_reference():
+    rng = np.random.default_rng(3)
+    y = rng.normal(2.0, 5.0, (7, 11))
+    for backend in ("host", "device"):
+        q = simplex_project_batch(y, 10.0, backend=backend)
+        assert np.all(q >= 0)
+        np.testing.assert_allclose(q.sum(axis=1), 10.0, atol=1e-4)
+        # projection optimality: q is the closest point of the simplex, so
+        # moving mass between any two cells with q_i > 0 must not improve
+        d = q - y
+        for g in range(y.shape[0]):
+            active = q[g] > 1e-9
+            grad = d[g][active]
+            assert grad.max() - grad.min() < 1e-4
+
+
+def test_nonneg_release_properties():
+    _, wk, plan, x, tables, rng = _setup([3, 4, 2, 3], pcost=0.05)
+    total = float(x.sum())
+    out = nonneg_release(plan, tables, total=total)
+    for c in wk.cliques:
+        assert np.all(out[c] >= 0)
+        _assert_total(out[c], total)       # fp64 total preservation
+    raw_err = sum(np.abs(tables[c] - exact_marginals_from_x(
+        plan.domain, [c], x)[c]).sum() for c in wk.cliques)
+    nn_err = sum(np.abs(out[c] - exact_marginals_from_x(
+        plan.domain, [c], x)[c]).sum() for c in wk.cliques)
+    assert nn_err <= raw_err               # projection toward the truth helps
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.lists(st.integers(2, 4), min_size=2, max_size=3),
+       st.integers(0, 10 ** 6))
+def test_nonneg_property(sizes, seed):
+    _, wk, plan, x, tables, rng = _setup(sizes, seed=seed, pcost=0.2)
+    pert = _perturb(tables, rng, scale=3.0)
+    total = float(x.sum())
+    out = nonneg_release(plan, pert, total=total, mw_rounds=1)
+    for c in wk.cliques:
+        assert np.all(out[c] >= 0)
+        _assert_total(out[c], total)
+
+
+def test_project_nonneg_local_only():
+    dom = Domain.create([3, 4])
+    tables = {(0,): np.array([5.0, -2.0, 3.0]),
+              (1,): np.array([-1.0, 2.0, 2.0, 1.0])}
+    out = project_nonneg(dom, tables, total=6.0)
+    for t in out.values():
+        assert np.all(t >= 0)
+        _assert_total(t, 6.0)
+
+
+def test_mw_refine_reduces_inconsistency():
+    _, wk, plan, x, tables, rng = _setup([3, 4, 2], pcost=0.1)
+    total = float(x.sum())
+    projected = project_nonneg(plan.domain, tables, total)
+
+    def inconsistency(q):
+        cons = solve_consistency(plan, q, fix_total=total, backend="host")
+        fit = cons.marginals()
+        return sum(float(np.abs(fit[c] - q[c]).sum()) for c in wk.cliques)
+
+    refined = mw_refine(plan, projected, total, rounds=3, eta=0.8)
+    for c in wk.cliques:
+        assert np.all(refined[c] >= 0)
+        _assert_total(refined[c], total)
+    assert inconsistency(refined) <= inconsistency(projected) + 1e-6
+
+
+def test_zero_total_projects_to_zero():
+    dom = Domain.create([3, 2])
+    out = project_nonneg(dom, {(0,): np.array([1.0, -2.0, 0.5])}, total=-4.0)
+    assert np.all(out[(0,)] == 0.0)
+
+
+# -------------------------------------------------------------------- synth
+
+def test_junction_order_chain_is_markov():
+    dom = Domain.create([3, 4, 2, 3])
+    steps = junction_order(dom, [(0, 1), (1, 2), (2, 3)])
+    assert [s[0] for s in steps] == [0, 1, 2, 3]
+    assert steps[1][2] == (0,) and steps[2][2] == (1,) and steps[3][2] == (2,)
+
+
+def test_junction_order_rejects_uncovered_attribute():
+    dom = Domain.create([3, 4, 2])
+    with pytest.raises(ValueError):
+        junction_order(dom, [(0, 1)])
+
+
+def test_synthesize_chi_square_on_tree_workload():
+    """On a tree workload junction sampling is exact: sampled marginals must
+    match the released ones within sampling error (χ² check, z=6)."""
+    dom = Domain.create([3, 4, 2, 3])
+    wk = MarginalWorkload(dom, ((0, 1), (1, 2), (2, 3)))
+    _, _, plan, x, tables, rng = _setup([3, 4, 2, 3], seed=1, pcost=2.0,
+                                        workload=wk)
+    total = float(x.sum())
+    nn = nonneg_release(plan, tables, total=total)
+    recs = synthesize_records(dom, nn, 120_000, jax.random.PRNGKey(0))
+    assert recs.shape == (120_000, 4) and recs.dtype == np.int32
+    for i, a in enumerate(dom.attributes):
+        assert recs[:, i].min() >= 0 and recs[:, i].max() < a.size
+    report = synth_report(dom, nn, recs, total=total)
+    assert report.ok(z=6.0), report.summary()
+    assert report.max_tv < 0.05
+
+
+def test_synthesize_batched_matches_unbatched_shapes():
+    dom = Domain.create([3, 4])
+    wk = MarginalWorkload(dom, ((0, 1),))
+    _, _, plan, x, tables, _ = _setup([3, 4], pcost=2.0, workload=wk)
+    nn = nonneg_release(plan, tables, total=float(x.sum()))
+    r1 = synthesize_records(dom, nn, 5000, jax.random.PRNGKey(7))
+    r2 = synthesize_records(dom, nn, 5000, jax.random.PRNGKey(7), batch=1024)
+    assert r1.shape == r2.shape == (5000, 2)
+    with pytest.raises(ValueError):
+        synthesize_records(dom, nn, 0, jax.random.PRNGKey(0))
+
+
+# ----------------------------------------------------------- postprocess glue
+
+def test_postprocess_release_modes():
+    _, wk, plan, x, tables, rng = _setup([3, 4, 2])
+    pert = _perturb(tables, rng)
+    cons = postprocess_release(plan, pert, "consistent")
+    assert set(cons) == set(wk.cliques)
+    nn = postprocess_release(plan, pert, "nonneg", total=float(x.sum()))
+    assert all(np.all(t >= 0) for t in nn.values())
+    with pytest.raises(ValueError):
+        postprocess_release(plan, pert, "fancy")

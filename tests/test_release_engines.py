@@ -1,0 +1,248 @@
+"""Serving-tier wiring of the release subsystem + sharded-tier satellites.
+
+Covers ``release(postprocess=...)`` / ``synthesize`` on all three engines
+(continuous, RP+, secure discrete — integer-exact totals), the
+``corpus_marginal_release`` passthrough, the configurable ``_EngineCache``
+(constructor arg, ``REPRO_ENGINE_CACHE_SIZE`` env, hit/miss counters on
+``EngineStats``) and the ``_local_marginal`` dtype-threading fix.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import Domain, MarginalWorkload, PrivacyBudget, all_kway, select
+from repro.data.tabular import marginals_from_records, synthetic_records
+from repro.engine.engine import EngineStats
+from repro.engine import sharded
+from repro.engine.corpus_stats import corpus_marginal_release
+from repro.engine.sharded import (_EngineCache, _clique_strides,
+                                  _local_marginal, sharded_measure)
+
+
+@pytest.fixture
+def small():
+    dom = Domain.create([4, 3, 5, 2])
+    wk = all_kway(dom, 2, include_lower=True)
+    plan = select(wk, pcost_budget=1.0)
+    records = synthetic_records(dom, 5000, seed=0)
+    margs = marginals_from_records(dom, plan.cliques, records)
+    return dom, wk, plan, records, margs
+
+
+# --------------------------------------------------------------- MarginalEngine
+
+def test_marginal_engine_postprocess_nonneg(small):
+    dom, wk, plan, records, margs = small
+    eng = plan.engine(use_kernel=False, precompile=False)
+    tables, meas = eng.release(margs, jax.random.PRNGKey(0),
+                               postprocess="nonneg")
+    total = float(tables[wk.cliques[0]].sum())
+    for c in wk.cliques:
+        assert np.all(tables[c] >= 0)
+        assert abs(tables[c].sum() - total) <= 1e-6 * max(total, 1.0)
+    assert eng.stats.postprocess_calls == 1
+    # consistency: shared sub-marginals of overlapping cliques agree
+    m01 = tables[(0, 1)].reshape(4, 3)
+    m12 = tables[(1, 2)].reshape(3, 5)
+    # (nonneg projection is local, so only approximate consistency: within
+    # a few counts on a 5000-record release)
+    assert np.abs(m01.sum(axis=0) - m12.sum(axis=1)).max() < 50
+
+
+def test_marginal_engine_postprocess_consistent_is_exact_consistent(small):
+    dom, wk, plan, records, margs = small
+    eng = plan.engine(use_kernel=False, precompile=False)
+    tables, _ = eng.release(margs, jax.random.PRNGKey(0),
+                            postprocess="consistent")
+    m01 = tables[(0, 1)].reshape(4, 3)
+    m12 = tables[(1, 2)].reshape(3, 5)
+    np.testing.assert_allclose(m01.sum(axis=0), m12.sum(axis=1), atol=1e-3)
+
+
+def test_marginal_engine_synthesize(small):
+    dom, wk, plan, records, margs = small
+    eng = plan.engine(use_kernel=False, precompile=False)
+    with pytest.raises(ValueError):
+        eng.synthesize(100, jax.random.PRNGKey(0))   # no nonneg release yet
+    eng.release(margs, jax.random.PRNGKey(0), postprocess="nonneg")
+    recs = eng.synthesize(20_000, jax.random.PRNGKey(1))
+    assert recs.shape == (20_000, dom.n_attrs) and recs.dtype == np.int32
+    for i, a in enumerate(dom.attributes):
+        assert recs[:, i].min() >= 0 and recs[:, i].max() < a.size
+    assert eng.stats.synthesize_calls == 1
+
+
+def test_raw_release_unchanged(small):
+    """postprocess=None keeps the historical unbiased (tables, meas) output."""
+    dom, wk, plan, records, margs = small
+    eng = plan.engine(use_kernel=False, precompile=False)
+    t1, m1 = eng.release(margs, jax.random.PRNGKey(0))
+    meas2 = eng.measure(margs, jax.random.PRNGKey(0))
+    t2 = eng.reconstruct(meas2)
+    for c in wk.cliques:
+        np.testing.assert_allclose(t1[c], t2[c], rtol=1e-6)
+    assert eng.stats.postprocess_calls == 0
+
+
+# --------------------------------------------------------------- DiscreteEngine
+
+def test_discrete_engine_integer_exact_totals(small):
+    dom, wk, plan, records, margs = small
+    eng = plan.engine(secure=True, use_kernel=False, precompile=False)
+    tables, meas = eng.release(margs, jax.random.PRNGKey(3),
+                               postprocess="nonneg")
+    measured = float(np.asarray(meas[()].omega).reshape(-1)[0])
+    assert measured.is_integer()
+    for c in wk.cliques:
+        assert np.all(tables[c] >= 0)
+        assert round(float(tables[c].sum())) == int(measured)
+    recs = eng.synthesize(5000, jax.random.PRNGKey(4))
+    assert recs.shape == (5000, dom.n_attrs)
+
+
+# ------------------------------------------------------------------- PlusEngine
+
+def test_plus_engine_identity_postprocess(small):
+    from repro.core.plus import PlusSchema, select_plus
+    dom, wk, plan, records, margs = small
+    schema = PlusSchema.create(dom, ["identity"] * dom.n_attrs)
+    pplan = select_plus(wk, schema, pcost_budget=1.0)
+    margs_p = marginals_from_records(dom, pplan.cliques, records)
+    eng = pplan.engine(precompile=False)
+    tables, _ = eng.release(margs_p, jax.random.PRNGKey(0),
+                            postprocess="nonneg")
+    total = float(tables[wk.cliques[0]].sum())
+    for c in wk.cliques:
+        assert np.all(tables[c] >= 0)
+        assert abs(tables[c].sum() - total) <= 1e-4 * max(total, 1.0)
+    recs = eng.synthesize(2000, jax.random.PRNGKey(1))
+    assert recs.shape == (2000, dom.n_attrs)
+
+
+def test_plus_engine_non_identity_rejected():
+    from repro.core.plus import PlusSchema, select_plus
+    dom = Domain.create([8, 3], kinds=["numeric", "categorical"])
+    wk = all_kway(dom, 2, include_lower=True)
+    schema = PlusSchema.create(dom, ["range", "identity"],
+                               strategy_mode="hier")
+    pplan = select_plus(wk, schema, pcost_budget=1.0)
+    records = synthetic_records(dom, 1000, seed=1)
+    margs = marginals_from_records(dom, pplan.cliques, records)
+    eng = pplan.engine(precompile=False)
+    with pytest.raises(ValueError, match="identity-basis"):
+        eng.release(margs, jax.random.PRNGKey(0), postprocess="nonneg")
+    with pytest.raises(ValueError, match="identity-basis"):
+        eng.release(margs, jax.random.PRNGKey(0), postprocess="consistent")
+
+
+# -------------------------------------------------------- sharded passthrough
+
+def test_corpus_release_postprocess_passthrough(small):
+    dom, wk, plan, records, margs = small
+    budget = PrivacyBudget.from_zcdp(2.0)
+    tables, variances, report = corpus_marginal_release(
+        dom, wk, jnp.asarray(records), budget, 1.0, jax.random.PRNGKey(0),
+        postprocess="nonneg")
+    assert set(tables) == set(wk.cliques)
+    for c in wk.cliques:
+        assert np.all(np.asarray(tables[c]) >= 0)
+    assert set(variances) == set(wk.cliques)
+
+
+def test_corpus_release_secure_postprocess_integer_totals(small):
+    dom, wk, plan, records, margs = small
+    budget = PrivacyBudget.from_zcdp(2.0)
+    tables, _, _ = corpus_marginal_release(
+        dom, wk, jnp.asarray(records), budget, 1.0, jax.random.PRNGKey(0),
+        secure=True, postprocess="nonneg")
+    sums = {round(float(np.asarray(t).sum())) for t in tables.values()}
+    assert len(sums) == 1          # one common integer total, exactly
+
+
+# -------------------------------------------------------------- engine cache
+
+class _FakePlan:
+    """Weakref-able stand-in for a plan."""
+
+
+class _FakeEngine:
+    def __init__(self):
+        self.stats = EngineStats()
+
+
+def test_engine_cache_counters_and_lru():
+    cache = _EngineCache(maxsize=2)
+    plans = [_FakePlan() for _ in range(3)]
+    engines = [_FakeEngine() for _ in range(3)]
+    assert cache.get(plans[0], False, jnp.float32) is None
+    assert cache.misses == 1 and cache.hits == 0
+    for p, e in zip(plans[:2], engines[:2]):
+        cache.put(p, False, jnp.float32, e)
+    assert cache.get(plans[0], False, jnp.float32) is engines[0]
+    assert cache.hits == 1
+    assert engines[0].stats.cache_hits == 1
+    cache.put(plans[2], False, jnp.float32, engines[2])   # evicts LRU (plans[1])
+    assert cache.get(plans[1], False, jnp.float32) is None
+    assert cache.get(plans[0], False, jnp.float32) is engines[0]
+    assert len(cache) == 2
+
+
+def test_engine_cache_env_capacity(monkeypatch):
+    monkeypatch.setenv("REPRO_ENGINE_CACHE_SIZE", "3")
+    assert _EngineCache().maxsize == 3
+    monkeypatch.setenv("REPRO_ENGINE_CACHE_SIZE", "not-a-number")
+    assert _EngineCache().maxsize == 16
+    monkeypatch.delenv("REPRO_ENGINE_CACHE_SIZE", raising=False)
+    assert _EngineCache().maxsize == 16
+    assert _EngineCache(maxsize=5).maxsize == 5           # arg wins over env
+    with pytest.raises(ValueError):
+        _EngineCache(maxsize=0)
+
+
+def test_sharded_measure_records_cache_hits(small):
+    dom, wk, plan, records, margs = small
+    before_hits, before_misses = (sharded._ENGINE_CACHE.hits,
+                                  sharded._ENGINE_CACHE.misses)
+    sharded_measure(plan, jnp.asarray(records), jax.random.PRNGKey(0))
+    sharded_measure(plan, jnp.asarray(records), jax.random.PRNGKey(1))
+    eng = sharded._engine_for(plan, False, jnp.float32)
+    assert eng.stats.cache_misses == 1        # constructed exactly once
+    assert eng.stats.cache_hits >= 2          # served from cache afterwards
+    assert sharded._ENGINE_CACHE.misses >= before_misses + 1
+    assert sharded._ENGINE_CACHE.hits >= before_hits + 2
+
+
+# ------------------------------------------------------- _local_marginal dtype
+
+def test_local_marginal_dtype_threads_from_noise_dtype():
+    from repro.core.mechanism import noise_dtype
+    dom = Domain.create([2, 3])
+    n = 3001            # odd and > 2048: not representable in float16
+    recs = jnp.zeros((n, 2), jnp.int32)      # every record in cell 0
+    strides, n_cells = _clique_strides(dom, (0, 1))
+    h = _local_marginal(recs, [0, 1], strides, n_cells)
+    assert h.dtype == noise_dtype()          # was hard-coded float32
+    # low-precision accumulation visibly drifts (3001 has no fp16 encoding) …
+    h16 = _local_marginal(recs, [0, 1], strides, n_cells, jnp.float16)
+    assert float(h16[0]) != float(n)
+    # … while the threaded fp64 path is exact at the same domain
+    old = jax.config.read("jax_enable_x64")
+    try:
+        jax.config.update("jax_enable_x64", True)
+        h64 = _local_marginal(recs, [0, 1], strides, n_cells)
+        assert h64.dtype == jnp.float64
+        assert float(h64[0]) == float(n)
+    finally:
+        jax.config.update("jax_enable_x64", old)
+
+
+def test_sharded_marginals_default_dtype_matches_engine_path(small):
+    dom, wk, plan, records, margs = small
+    out = sharded.sharded_marginals(dom, plan.cliques, jnp.asarray(records))
+    from repro.core.mechanism import noise_dtype
+    for c, t in out.items():
+        assert t.dtype == noise_dtype()
+        np.testing.assert_allclose(np.asarray(t, np.float64), margs[c],
+                                   rtol=1e-6)
