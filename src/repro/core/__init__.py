@@ -7,6 +7,10 @@ from .residual import (expand_marginal, expand_residual, marginal_factors,
 from .plantable import BasePlan, PlanTable, SigmaView, plan_table, sov_closed_form
 from .select import (Plan, select, select_convex, select_max_variance,
                      select_sum_of_variances, select_utility_constrained)
+from .partition import (DEFAULT_MAX_BLOCK, Decomposition, Partition,
+                        decompose, interaction_weights, partition_attributes)
+from .composite import (CompositePlan, allocate_budget,
+                        compare_with_monolithic, select_dnc)
 from .mechanism import (Measurement, exact_marginals_from_x, measure,
                         measure_np, measure_np_batched, pcost_of_plan,
                         residual_answer, signature_groups)

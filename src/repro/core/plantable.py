@@ -32,6 +32,7 @@ consume one interface with no ``isinstance`` branching.
 """
 from __future__ import annotations
 
+import itertools
 import math
 import weakref
 from collections import OrderedDict
@@ -60,25 +61,40 @@ def _encode(mat: np.ndarray, base: int) -> np.ndarray:
 
 
 def _group_by_len(cliques: Sequence[Clique]):
-    """{k: (workload row indices, (g, k) attr-index matrix)}."""
-    by: Dict[int, Tuple[list, list]] = {}
-    for r, c in enumerate(cliques):
-        by.setdefault(len(c), ([], []))
-        by[len(c)][0].append(r)
-        by[len(c)][1].append(c)
-    return {k: (np.asarray(rows, np.int64),
-                np.asarray(mat, np.int64).reshape(len(rows), k))
-            for k, (rows, mat) in by.items()}
+    """{k: (workload row indices, (g, k) attr-index matrix)}.
+
+    Vectorized: one ``fromiter`` pass over the flattened attribute stream and
+    one over the lengths, then per-size row gathers — no per-clique Python
+    appends (the historical append loop dominated ``build`` at d=100).
+    """
+    m = len(cliques)
+    lens = np.fromiter(map(len, cliques), np.int64, count=m)
+    flat = np.fromiter(itertools.chain.from_iterable(cliques), np.int64,
+                       count=int(lens.sum()))
+    starts = np.concatenate([np.zeros(1, np.int64), np.cumsum(lens)])
+    out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+    for k in map(int, np.unique(lens)):
+        ridx = np.nonzero(lens == k)[0]
+        mat = flat[starts[ridx][:, None] + np.arange(k, dtype=np.int64)] \
+            if k else np.zeros((len(ridx), 0), np.int64)
+        out[k] = (ridx, mat)
+    return out
 
 
 @dataclass(eq=False)
 class PlanTable:
-    """Flat arrayized closure of one workload (built once, queried many times)."""
+    """Flat arrayized closure of one workload (built once, queried many times).
+
+    The closure is stored as per-size attribute matrices (``_members``,
+    ``_offsets``) — the tuple list ``cliques`` and the dict ``index`` are
+    *lazy*: materialized (and cached) on first access.  Selection, variance
+    and covariance queries run on the flat arrays alone, so a d=100 build no
+    longer pays for 166k Python tuples it may never look at.
+    """
 
     domain: Domain
     workload: MarginalWorkload
-    cliques: List[Clique]            # closure, sorted (len, lex)
-    index: Dict[Clique, int]
+    n_closure: int                   # closure size
     p: np.ndarray                    # (n,) pcost coefficients (Thm 3 / Thm 7)
     weights: np.ndarray              # (m,) workload importance Imp_A
     wk_index: np.ndarray             # (m,) closure index of each workload clique
@@ -91,18 +107,40 @@ class PlanTable:
     axis_marg: np.ndarray
     axis_cross: Optional[np.ndarray]  # None for RP+ tables (plain-only queries)
     plain: bool
+    _members: Optional[Dict[int, np.ndarray]] = field(default=None, repr=False)
+    _offsets: Optional[Dict[int, int]] = field(default=None, repr=False)
+    _cliques: Optional[List[Clique]] = field(default=None, repr=False)
+    _index: Optional[Dict[Clique, int]] = field(default=None, repr=False)
     _device: Dict[str, tuple] = field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------ dimensions
     @property
     def n(self) -> int:
         """Closure size (number of base mechanisms)."""
-        return len(self.cliques)
+        return self.n_closure
 
     @property
     def m(self) -> int:
         """Workload size (number of marginal queries)."""
         return len(self.workload.cliques)
+
+    # -------------------------------------------------- lazy clique material
+    @property
+    def cliques(self) -> List[Clique]:
+        """Closure as (len, lex)-sorted tuples (materialized on first use)."""
+        if self._cliques is None:
+            cl: List[Clique] = []
+            for s in sorted(self._members):
+                cl.extend(map(tuple, self._members[s].tolist()))
+            self._cliques = cl
+        return self._cliques
+
+    @property
+    def index(self) -> Dict[Clique, int]:
+        """Clique → closure position (materialized on first use)."""
+        if self._index is None:
+            self._index = {c: i for i, c in enumerate(self.cliques)}
+        return self._index
 
     # -------------------------------------------------------------- builders
     @staticmethod
@@ -126,100 +164,114 @@ class PlanTable:
         base = max(dom.n_attrs, 2)
         groups = _group_by_len(wk)
         kmax = max(groups)
-        arrayized = kmax * math.log2(base) <= 62
-        if arrayized:
-            cliques, index, offsets, keys_sorted, members = \
-                PlanTable._closure_ranked(groups, base, kmax)
-        else:       # huge cliques: fall back to the dict closure (rare)
-            cliques = closure(wk)
-            index = {c: i for i, c in enumerate(cliques)}
-        n = len(cliques)
-
-        p = np.ones(n)
-        if arrayized:
-            for s, mem in members.items():
-                if s:
-                    seg = slice(offsets[s], offsets[s] + len(mem))
-                    p[seg] = np.prod(axis_pcost[mem], axis=1)
-        else:
-            for i, c in enumerate(cliques):
-                p[i] = float(np.prod(axis_pcost[list(c)])) if c else 1.0
-
-        rows_l, cols_l, vals_l = [], [], []
-        wk_index = np.empty(m, np.int64)
-        if arrayized:
-            for k, (ridx, mat) in groups.items():
-                wk_index[ridx] = (offsets[k] + np.searchsorted(
-                    keys_sorted[k], _encode(mat, base))) if k else 0
-                for mask in range(1 << k):
-                    sel = [j for j in range(k) if mask >> j & 1]
-                    uns = [j for j in range(k) if not mask >> j & 1]
-                    s = len(sel)
-                    sub = mat[:, sel]
-                    cols = (offsets[s] + np.searchsorted(
-                        keys_sorted[s], _encode(sub, base))) if s \
-                        else np.zeros(len(mat), np.int64)
-                    val = np.ones(len(mat))
-                    if sel:
-                        val *= np.prod(axis_meas[sub], axis=1)
-                    if uns:
-                        val *= np.prod(axis_marg[mat[:, uns]], axis=1)
-                    rows_l.append(ridx)
-                    cols_l.append(cols)
-                    vals_l.append(val)
-        else:
-            for r, wc in enumerate(wk):
-                wk_index[r] = index[wc]
-                for sub in subsets(wc):
-                    rows_l.append(np.array([r], np.int64))
-                    cols_l.append(np.array([index[sub]], np.int64))
-                    rest = [i for i in wc if i not in set(sub)]
-                    val = float(np.prod(axis_meas[list(sub)])) if sub else 1.0
-                    if rest:
-                        val *= float(np.prod(axis_marg[rest]))
-                    vals_l.append(np.array([val]))
-        inc_rows = np.concatenate(rows_l)
-        inc_cols = np.concatenate(cols_l)
-        inc_vals = np.concatenate(vals_l)
         weights = workload.weight_array()
+        if kmax * math.log2(base) > 62:   # huge cliques: dict closure (rare)
+            return PlanTable._build_dict(workload, weights, axis_pcost,
+                                         axis_meas, axis_marg, axis_cross,
+                                         plain)
+
+        # Single pass over (size-class, subset-mask): the encoded key, the
+        # Π axis_meas (selected) and Π axis_marg (unselected) products are
+        # each a mask-DP reusing the mask-minus-highest-bit value — no
+        # re-encoding, no fancy-index ``np.prod`` gathers per mask.  The
+        # closure AND the incidence columns then come out of ONE
+        # ``np.unique(..., return_inverse=True)`` per subset size.
+        cand: Dict[int, list] = {}
+        for k, (ridx, mat) in sorted(groups.items()):
+            nk = len(mat)
+            meas_col = [axis_meas[mat[:, j]] for j in range(k)]
+            marg_col = [axis_marg[mat[:, j]] for j in range(k)]
+            key_dp = [np.zeros(nk, np.int64)] + [None] * ((1 << k) - 1)
+            meas_dp = [np.ones(nk)] + [None] * ((1 << k) - 1)
+            marg_dp = [np.ones(nk)] + [None] * ((1 << k) - 1)
+            full = (1 << k) - 1
+            for mask in range(1, 1 << k):
+                hb = mask.bit_length() - 1
+                rest = mask ^ (1 << hb)
+                key_dp[mask] = key_dp[rest] * base + mat[:, hb]
+                meas_dp[mask] = meas_dp[rest] * meas_col[hb]
+                marg_dp[mask] = marg_dp[rest] * marg_col[hb]
+            for mask in range(1 << k):
+                s = bin(mask).count("1")
+                sel = [j for j in range(k) if mask >> j & 1]
+                cand.setdefault(s, []).append(
+                    (key_dp[mask], ridx, meas_dp[mask] * marg_dp[full ^ mask],
+                     mat[:, sel], mask == full))
+
+        nnz = sum(len(e[0]) for ch in cand.values() for e in ch)
+        inc_rows = np.empty(nnz, np.int64)
+        inc_cols = np.empty(nnz, np.int64)
+        inc_vals = np.empty(nnz)
+        wk_index = np.empty(m, np.int64)
+        members: Dict[int, np.ndarray] = {}
+        offsets: Dict[int, int] = {}
+        p_segs: List[np.ndarray] = []
+        n = pos = 0
+        for s in sorted(cand):
+            chunks = cand[s]
+            keys = np.concatenate([c[0] for c in chunks])
+            uk, first, inv = np.unique(keys, return_index=True,
+                                       return_inverse=True)
+            offsets[s] = n
+            members[s] = np.concatenate([c[3] for c in chunks], axis=0)[first]
+            p_segs.append(np.prod(axis_pcost[members[s]], axis=1)
+                          if s else np.ones(len(uk)))
+            cols = n + inv
+            at = 0
+            for _keys, ridx, vals, _sub, is_full in chunks:
+                g = len(ridx)
+                sl = slice(pos, pos + g)
+                inc_rows[sl] = ridx
+                inc_cols[sl] = cols[at:at + g]
+                inc_vals[sl] = vals
+                if is_full:
+                    wk_index[ridx] = cols[at:at + g]
+                pos += g
+                at += g
+            n += len(uk)
+        p = np.concatenate(p_segs)
         v = np.bincount(inc_cols, weights=weights[inc_rows] * inc_vals,
                         minlength=n)
-        return PlanTable(dom, workload, cliques, index, p, weights, wk_index,
+        return PlanTable(dom, workload, n, p, weights, wk_index,
                          inc_rows, inc_cols, inc_vals, v, axis_pcost,
-                         axis_meas, axis_marg, axis_cross, plain)
+                         axis_meas, axis_marg, axis_cross, plain,
+                         _members=members, _offsets=offsets)
 
     @staticmethod
-    def _closure_ranked(groups, base: int, kmax: int):
-        """Downward closure via rank-indexed combinatorics (no itertools).
-
-        For every workload size class, every one of the 2^k subset masks is a
-        vectorized column gather; per subset size, ``np.unique`` on encoded
-        keys dedups and lex-sorts in one shot.
-        """
-        cand: Dict[int, List[np.ndarray]] = {s: [] for s in range(kmax + 1)}
-        for k, (_ridx, mat) in groups.items():
-            for mask in range(1 << k):
-                sel = [j for j in range(k) if mask >> j & 1]
-                if sel:
-                    cand[len(sel)].append(mat[:, sel])
-        cliques: List[Clique] = [()]
-        offsets = {0: 0}
-        keys_sorted = {0: np.zeros(1, np.int64)}
-        members: Dict[int, np.ndarray] = {0: np.zeros((1, 0), np.int64)}
-        n = 1
-        for s in range(1, kmax + 1):
-            if not cand[s]:
-                continue
-            allm = np.concatenate(cand[s], axis=0)
-            uk, first = np.unique(_encode(allm, base), return_index=True)
-            offsets[s] = n
-            keys_sorted[s] = uk
-            mem = allm[first]
-            members[s] = mem
-            cliques.extend(map(tuple, mem.tolist()))
-            n += len(uk)
+    def _build_dict(workload, weights, axis_pcost, axis_meas, axis_marg,
+                    axis_cross, plain) -> "PlanTable":
+        """Fallback for cliques too wide for int64 keys: dict closure."""
+        dom = workload.domain
+        wk = workload.cliques
+        cliques = closure(wk)
         index = {c: i for i, c in enumerate(cliques)}
-        return cliques, index, offsets, keys_sorted, members
+        n = len(cliques)
+        p = np.ones(n)
+        for i, c in enumerate(cliques):
+            p[i] = float(np.prod(axis_pcost[list(c)])) if c else 1.0
+        rows_l, cols_l, vals_l = [], [], []
+        wk_index = np.empty(len(wk), np.int64)
+        for r, wc in enumerate(wk):
+            wk_index[r] = index[wc]
+            for sub in subsets(wc):
+                rows_l.append(r)
+                cols_l.append(index[sub])
+                rest = [i for i in wc if i not in set(sub)]
+                val = float(np.prod(axis_meas[list(sub)])) if sub else 1.0
+                if rest:
+                    val *= float(np.prod(axis_marg[rest]))
+                vals_l.append(val)
+        inc_rows = np.asarray(rows_l, np.int64)
+        inc_cols = np.asarray(cols_l, np.int64)
+        inc_vals = np.asarray(vals_l)
+        v = np.bincount(inc_cols, weights=weights[inc_rows] * inc_vals,
+                        minlength=n)
+        table = PlanTable(dom, workload, n, p, weights, wk_index,
+                          inc_rows, inc_cols, inc_vals, v, axis_pcost,
+                          axis_meas, axis_marg, axis_cross, plain)
+        table._cliques = cliques
+        table._index = index
+        return table
 
     @staticmethod
     def for_workload(workload: MarginalWorkload) -> "PlanTable":

@@ -46,8 +46,14 @@ class Plan(BasePlan):
     """Output of the selection phase: which base mechanisms to run, at what scale.
 
     Carried by the PlanTable IR; ``plan.sigmas[A]`` and the legacy accessors
-    are thin views over the σ² array (docs/DESIGN.md §9).
+    are thin views over the σ² array (docs/DESIGN.md §9).  ``mu`` is the
+    max-variance dual point that produced the plan (None for other
+    objectives) — feed it back via ``select_max_variance(..., mu0=...)`` to
+    warm-start a re-plan of a structurally similar workload (the D&C
+    per-block loop does exactly that, docs/DESIGN.md §12).
     """
+
+    mu: Optional[np.ndarray] = None
 
     def marginal_variance(self, clique: Clique) -> float:
         """Per-cell variance of the reconstructed marginal on ``clique`` (Thm 4)."""
@@ -177,15 +183,54 @@ def legacy_maxvar_sigmas(workload: MarginalWorkload, pcost_budget: float = 1.0,
 # SoV: Lemma 2 closed form on the IR
 # ---------------------------------------------------------------------------
 
+def _route_strategy(strategy: str, workload: MarginalWorkload, objective: str,
+                    pcost_budget, weights, blocks, max_block, kw):
+    """Resolve the ``strategy`` switch shared by all select entry points.
+
+    Returns a :class:`~repro.core.composite.CompositePlan` when the
+    divide-and-conquer route is taken, ``None`` when the caller should run
+    the monolithic path.  ``"auto"`` stays monolithic whenever the closure is
+    comfortably in-memory (every historical call is bit-for-bit unchanged)
+    and switches to D&C only past :data:`AUTO_DNC_NNZ` incidence entries —
+    the regime where the monolithic closure would not fit.
+    """
+    if strategy == "monolithic":
+        if blocks is not None or max_block is not None:
+            raise ValueError("blocks=/max_block= require strategy='dnc' "
+                             "(or 'auto')")
+        return None
+    if strategy == "auto":
+        est_nnz = sum(1 << len(c) for c in workload.cliques)
+        if est_nnz <= AUTO_DNC_NNZ and blocks is None and max_block is None:
+            return None
+    elif strategy != "dnc":
+        raise ValueError(f"unknown strategy {strategy!r}")
+    from .composite import select_dnc
+    return select_dnc(workload, pcost_budget, objective=objective,
+                      weights=weights, blocks=blocks, max_block=max_block,
+                      **kw)
+
+
+#: strategy="auto" switches to divide-and-conquer past this estimated
+#: closure-incidence size (the d=100 all-<=3-way headline is ~1.3M).
+AUTO_DNC_NNZ = 4_000_000
+
+
 def select_sum_of_variances(workload: MarginalWorkload, pcost_budget: float = 1.0,
                             weights: Optional[Mapping[Clique, float]] = None,
-                            table: Optional[PlanTable] = None) -> Plan:
+                            table: Optional[PlanTable] = None,
+                            strategy: str = "monolithic",
+                            blocks=None, max_block=None) -> BasePlan:
     """Closed-form optimum for weighted sum of per-cell variances (Lemma 2).
 
     Cliques with v_A == 0 (needed for reconstruction completeness but receiving
     zero objective weight) get a vanishing budget sliver, computed overflow-safe
     (see :func:`repro.core.plantable.sov_closed_form`).
     """
+    routed = _route_strategy(strategy, workload, "sum_of_variances",
+                             pcost_budget, weights, blocks, max_block, {})
+    if routed is not None:
+        return routed
     table = plan_table(workload) if table is None else table
     v = table.sov_coeffs(weights)
     sig = sov_closed_form(table.p, v, pcost_budget)
@@ -209,10 +254,25 @@ def _maxvar_eval_fp64(mu, p, rows, cols, vals, cw, c, n, m):
     return float(var.max()), u, float(T)
 
 
-def _maxvar_numpy(p, rows, cols, vals, cw, c, iters, tol, n, m):
-    """Arrayized host loop: two bincount segment-sums per iteration."""
-    mu = np.full(m, 1.0 / m)
-    best_primal, best_u, dual_best = math.inf, None, -math.inf
+def _normalize_mu0(mu0, m) -> np.ndarray:
+    """Validate/normalize a warm-start dual point onto the simplex."""
+    mu = np.asarray(mu0, np.float64).reshape(-1)
+    if mu.shape != (m,):
+        raise ValueError(f"mu0 has shape {mu.shape}, workload has {m} "
+                         "marginals")
+    mu = np.maximum(mu, 1e-300)
+    return mu / mu.sum()
+
+
+def _maxvar_numpy(p, rows, cols, vals, cw, c, iters, tol, n, m, mu0=None):
+    """Arrayized host loop: two bincount segment-sums per iteration.
+
+    ``mu0`` warm-starts the dual ascent; the fp64 primal–dual gap certificate
+    exits the loop the moment optimality is proven, so a good warm start
+    (e.g. the previous block of a D&C sweep) pays for itself immediately.
+    """
+    mu = np.full(m, 1.0 / m) if mu0 is None else _normalize_mu0(mu0, m)
+    best_primal, best_u, best_mu, dual_best = math.inf, None, mu, -math.inf
     logm = 2.0 * math.log(max(m, 2))
     for t in range(iters):
         v = np.bincount(cols, weights=vals * (mu / cw)[rows], minlength=n)
@@ -224,14 +284,14 @@ def _maxvar_numpy(p, rows, cols, vals, cw, c, iters, tol, n, m):
         primal = float(var.max())
         dual_best = max(dual_best, float(T))
         if primal < best_primal:
-            best_primal, best_u = primal, u
+            best_primal, best_u, best_mu = primal, u, mu
         if best_primal - dual_best <= tol * max(best_primal, 1e-300):
             break
         eta = logm / (primal * math.sqrt(t + 1.0))
         mu = mu * np.exp(eta * (var - primal))
         mu = np.maximum(mu, 1e-300)
         mu /= mu.sum()
-    return best_u, best_primal
+    return best_u, best_primal, best_mu
 
 
 @partial(jax.jit, static_argnames=("n", "m", "chunk"))
@@ -267,11 +327,16 @@ def _maxvar_run_chunk(mu, bp, bmu, t0, p_j, rows_j, cols_j, vals_j, icw,
     return carry
 
 
-def _maxvar_device(table, cw, c, iters, tol, chunk):
+def _maxvar_device(table, cw, c, iters, tol, chunk, mu0=None):
     """Chunked ``lax.scan`` dual ascent: every iteration is two
     ``jax.ops.segment_sum`` contractions over the IR incidence; fp64 host
     checkpoints at chunk boundaries track the best primal and certify the
-    primal–dual gap."""
+    primal–dual gap.
+
+    ``mu0`` warm-starts the dual point; a warm start also shrinks the first
+    chunk so the gap certificate is consulted early — a re-plan that is
+    already (near-)optimal exits after a handful of iterations instead of
+    burning the full ``iters`` budget."""
     n, m = table.n, table.m
     p, rows, cols, vals = table.p, table.inc_rows, table.inc_cols, table.inc_vals
     p_j, rows_j, cols_j, vals_j = table.device_arrays()
@@ -281,15 +346,17 @@ def _maxvar_device(table, cw, c, iters, tol, chunk):
     logm = 2.0 * math.log(max(m, 2))
     cc = float(c)
 
-    mu_j = jnp.full(m, 1.0 / m, dt)
+    mu_h = np.full(m, 1.0 / m) if mu0 is None else _normalize_mu0(mu0, m)
+    mu_j = jnp.asarray(mu_h, dt)
     bp_j = jnp.asarray(np.inf, dt)
     bmu_j = mu_j
-    best_primal, best_u, dual_best = math.inf, None, -math.inf
+    best_primal, best_u, best_mu, dual_best = math.inf, None, mu_h, -math.inf
     t0 = 0
+    first_chunk = min(chunk, 25) if mu0 is not None else chunk
     while t0 < iters:
         # Exact iteration count: the tail chunk shrinks instead of overrunning
         # (at most one extra compilation per distinct remainder size).
-        k = min(chunk, iters - t0)
+        k = min(first_chunk if t0 == 0 else chunk, iters - t0)
         mu_j, bp_j, bmu_j = _maxvar_run_chunk(
             mu_j, bp_j, bmu_j, float(t0), p_j, rows_j, cols_j, vals_j, icw,
             cc, tiny, logm, n=n, m=m, chunk=k)
@@ -300,17 +367,20 @@ def _maxvar_device(table, cw, c, iters, tol, chunk):
                                              cw, cc, n, m)
             dual_best = max(dual_best, T)
             if primal < best_primal:
-                best_primal, best_u = primal, u
+                best_primal, best_u, best_mu = primal, u, cand
         if best_primal - dual_best <= tol * max(best_primal, 1e-300):
             break
-    return best_u, best_primal
+    return best_u, best_primal, best_mu
 
 
 def select_max_variance(workload: MarginalWorkload, pcost_budget: float = 1.0,
                         weights: Optional[Mapping[Clique, float]] = None,
                         iters: int = 4000, tol: float = 1e-9,
                         table: Optional[PlanTable] = None,
-                        backend: str = "auto", chunk: int = 250) -> Plan:
+                        backend: str = "auto", chunk: int = 250,
+                        mu0: Optional[np.ndarray] = None,
+                        strategy: str = "monolithic",
+                        blocks=None, max_block=None) -> BasePlan:
     """Exact max-variance selection via the concave dual (beyond-paper solver).
 
     min_σ max_A Var_A/c_A  s.t. pcost ≤ c  has Lagrangian dual
@@ -324,7 +394,17 @@ def select_max_variance(workload: MarginalWorkload, pcost_budget: float = 1.0,
     bincount, same story as interpret-mode Pallas; ``backend='auto'``
     resolves per jax backend like the kernel paths do) — and optimality is
     certified by the primal–dual gap.
+
+    ``mu0`` warm-starts the dual ascent from a previous solution's dual point
+    (``plan.mu``); the gap certificate then exits as soon as optimality is
+    proven instead of running the full ``iters`` budget.
     """
+    routed = _route_strategy(strategy, workload, "max_variance", pcost_budget,
+                             weights, blocks, max_block,
+                             dict(iters=iters, tol=tol, backend=backend,
+                                  chunk=chunk))
+    if routed is not None:
+        return routed
     table = plan_table(workload) if table is None else table
     cw = table.weight_vector(weights, default_to_workload=True)
     c = float(pcost_budget)
@@ -332,15 +412,15 @@ def select_max_variance(workload: MarginalWorkload, pcost_budget: float = 1.0,
         backend = "device" if (jax.default_backend() != "cpu"
                                and table.inc_vals.size >= 20_000) else "numpy"
     if backend == "device":
-        u, primal = _maxvar_device(table, cw, c, iters, tol, chunk)
+        u, primal, mu = _maxvar_device(table, cw, c, iters, tol, chunk, mu0)
     elif backend == "numpy":
-        u, primal = _maxvar_numpy(table.p, table.inc_rows, table.inc_cols,
-                                  table.inc_vals, cw, c, iters, tol,
-                                  table.n, table.m)
+        u, primal, mu = _maxvar_numpy(table.p, table.inc_rows, table.inc_cols,
+                                      table.inc_vals, cw, c, iters, tol,
+                                      table.n, table.m, mu0)
     else:
         raise ValueError(backend)
     return Plan(table, u, "max_variance",
-                pcost=table.pcost(u), loss_value=primal)
+                pcost=table.pcost(u), loss_value=primal, mu=mu)
 
 
 # ---------------------------------------------------------------------------
@@ -351,7 +431,9 @@ def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
                   loss: LossSpec = "max_variance",
                   weights: Optional[Mapping[Clique, float]] = None,
                   steps: int = 3000, lr: float = 0.05, seed: int = 0,
-                  table: Optional[PlanTable] = None) -> Plan:
+                  table: Optional[PlanTable] = None,
+                  strategy: str = "monolithic",
+                  blocks=None, max_block=None) -> BasePlan:
     """Solve privacy-constrained selection for a regular 1-homogeneous loss.
 
     ``loss`` is ``'max_variance'`` (max_A Var_A / c_A), ``'sum_of_variances'``
@@ -361,6 +443,11 @@ def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
     ``loss_value`` is computed before the plan is constructed — in fp64 for
     the built-in losses, in the callable's own precision otherwise.
     """
+    routed = _route_strategy(strategy, workload, "convex", pcost_budget,
+                             weights, blocks, max_block,
+                             dict(loss=loss, steps=steps, lr=lr, seed=seed))
+    if routed is not None:
+        return routed
     table = plan_table(workload) if table is None else table
     v_lin = table.sov_coeffs(weights)       # historical default-1.0 weighting
     w = table.weight_vector(weights, default_to_workload=True)
@@ -431,24 +518,38 @@ def select_convex(workload: MarginalWorkload, pcost_budget: float = 1.0,
 def select(workload: MarginalWorkload, pcost_budget: float = 1.0,
            objective: str = "sum_of_variances",
            weights: Optional[Mapping[Clique, float]] = None,
-           loss: Optional[LossSpec] = None, **kw) -> Plan:
+           loss: Optional[LossSpec] = None, strategy: str = "auto",
+           **kw) -> BasePlan:
     """Dispatch on objective: sov | maxvar | convex (user losses welcome).
 
     ``objective='convex'`` routes to :func:`select_convex`; pass the loss via
     ``loss=`` (a name or a positively 1-homogeneous callable).  A callable
     ``objective`` is shorthand for the same thing.
+
+    ``strategy`` picks the planning route (docs/DESIGN.md §12):
+    ``"monolithic"`` builds one PlanTable over the whole closure (the
+    historical path), ``"dnc"`` partitions the attributes and plans each
+    block independently (:func:`repro.core.composite.select_dnc`, returning a
+    :class:`~repro.core.composite.CompositePlan`), and the default
+    ``"auto"`` stays monolithic until the closure would outgrow memory
+    (:data:`AUTO_DNC_NNZ` incidence entries) — so every small workload keeps
+    its exact historical behavior while d=500-scale workloads plan at all.
+    ``blocks=`` / ``max_block=`` (forwarded to the partitioner) force the
+    D&C route when given.
     """
     if callable(objective):
         return select_convex(workload, pcost_budget, loss=objective,
-                             weights=weights, **kw)
+                             weights=weights, strategy=strategy, **kw)
     if objective in ("sum_of_variances", "sov", "rmse"):
-        return select_sum_of_variances(workload, pcost_budget, weights, **kw)
+        return select_sum_of_variances(workload, pcost_budget, weights,
+                                       strategy=strategy, **kw)
     if objective in ("max_variance", "maxvar"):
-        return select_max_variance(workload, pcost_budget, weights, **kw)
+        return select_max_variance(workload, pcost_budget, weights,
+                                   strategy=strategy, **kw)
     if objective == "convex":
         return select_convex(workload, pcost_budget,
                              loss="max_variance" if loss is None else loss,
-                             weights=weights, **kw)
+                             weights=weights, strategy=strategy, **kw)
     raise ValueError(objective)
 
 

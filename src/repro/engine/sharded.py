@@ -73,12 +73,23 @@ class _EngineCache:
     def __len__(self) -> int:
         return len(self._entries)
 
+    @staticmethod
+    def _child_plans(plan) -> tuple:
+        """Child plans of a composite plan (empty for monolithic plans)."""
+        return tuple(getattr(plan, "block_plans", None) or ())
+
     def _key(self, plan, use_kernel: bool, dtype, secure: bool = False,
              digits: int = 4) -> tuple:
         # digits is part of the key: a secure engine's σ̄/γ² are baked in at
         # construction, so two rationalizations must never share an engine
         # (the noise served would disagree with the privacy charged).
-        return (id(plan), bool(use_kernel), jnp.dtype(dtype).name,
+        # Composite plans additionally key on their child-plan identities:
+        # a composite entry is only valid while the exact block plans it was
+        # compiled against are alive, and _drop_plan distinguishes "this id
+        # is the entry's own plan" (drop it) from "this id is one of its
+        # children" (drop the parent, never the siblings).
+        return ((id(plan), tuple(map(id, self._child_plans(plan)))),
+                bool(use_kernel), jnp.dtype(dtype).name,
                 bool(secure), int(digits) if secure else None)
 
     def get(self, plan, use_kernel: bool, dtype, secure: bool = False,
@@ -88,8 +99,13 @@ class _EngineCache:
         if ent is None:
             self.misses += 1
             return None
-        ref, engine = ent
-        if ref() is not plan:          # id recycled: stale entry
+        ref, child_refs, engine = ent
+        stale = ref() is not plan      # id recycled: stale entry
+        if not stale:
+            children = self._child_plans(plan)
+            stale = len(child_refs) != len(children) or any(
+                r() is not c for r, c in zip(child_refs, children))
+        if stale:
             del self._entries[key]
             self.misses += 1
             return None
@@ -105,14 +121,24 @@ class _EngineCache:
         key = self._key(plan, use_kernel, dtype, secure, digits)
         while len(self._entries) >= self.maxsize:
             self._entries.popitem(last=False)       # LRU, one at a time
-        self._entries[key] = (weakref.ref(plan), engine)
+        self._entries[key] = (weakref.ref(plan),
+                              tuple(weakref.ref(c)
+                                    for c in self._child_plans(plan)),
+                              engine)
         if id(plan) not in self._finalized:
             self._finalized.add(id(plan))
             weakref.finalize(plan, self._drop_plan, id(plan))
 
     def _drop_plan(self, pid: int) -> None:
+        # Drop entries OWNED by this plan id, and composite entries that held
+        # it as a child (their engine references a dead block plan).  A dying
+        # composite parent matches only its own entries — the children's
+        # entries key on (child_id, ()) and survive, still serving any other
+        # owner of those block plans (they were never orphaned *stale*; they
+        # are independently validated on every hit).
         self._finalized.discard(pid)
-        for k in [k for k in self._entries if k[0] == pid]:
+        for k in [k for k in self._entries
+                  if k[0][0] == pid or pid in k[0][1]]:
             del self._entries[k]
 
 

@@ -3,7 +3,8 @@
 ``hypothesis`` is a dev-extra (pyproject.toml ``[project.optional-dependencies]
 dev``), but the suite must collect and run without it — CI images and the
 hermetic benchmark container don't ship it.  The fallback implements just the
-strategy surface these tests use (``integers``, ``lists``, ``tuples``) and a
+strategy surface these tests use (``integers``, ``floats``, ``lists``,
+``tuples``) and a
 ``@given`` that replays a fixed number of seeded pseudo-random examples, so
 property tests degrade to deterministic fuzzing instead of import errors.
 
@@ -40,6 +41,11 @@ except ImportError:          # pragma: no cover - exercised when hypothesis abse
         def integers(min_value, max_value):
             return _Strategy(lambda rng: int(rng.integers(min_value,
                                                           max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
 
         @staticmethod
         def lists(elements, min_size=0, max_size=10):
