@@ -1,0 +1,122 @@
+"""Release-server load benchmark → BENCH_serve.json (CI-gated).
+
+Eight tenants share one workload *shape* (uniform attribute sizes, so every
+tenant's ≤2-way closure collapses to two chain signatures) but hold their own
+plans, their own data, and their own budgets.  The benchmark drives the same
+request stream through the server twice:
+
+* ``sequential`` — ``max_batch=1``: the worker serves one request per drain,
+  one full set of chain launches per request (the pre-serving-tier cost);
+* ``batched``    — ``max_batch=16``: the worker fuses same-signature traffic
+  across tenants into shared chain launches (engine/multi.py).
+
+CI gates (ci.yml serve-bench): batched throughput ≥ 2× sequential at 8
+tenants; batched p99 latency under the committed ceiling; batched and
+sequential serving bit-identical on fixed seeds (the fusion is a pure
+re-batching, never a different mechanism).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit
+
+N_TENANTS = 8
+ATTR_SIZES = [8] * 6          # uniform sizes -> 2 fused signatures (w=1, w=2)
+RECORDS = 20_000
+
+
+def _setup(max_batch: int, ledger_path: str, rho: float = 1e6):
+    from repro.core import Domain, all_kway, select
+    from repro.data.tabular import marginals_from_records, synthetic_records
+    from repro.serve import BudgetLedger, ReleaseServer
+
+    dom = Domain.create(ATTR_SIZES)
+    ledger = BudgetLedger(ledger_path, fsync=False)
+    server = ReleaseServer(ledger, max_batch=max_batch, max_wait_ms=4.0)
+    server.start()
+    tenant_margs = {}
+    for t in range(N_TENANTS):
+        wk = all_kway(dom, 2, include_lower=True)
+        plan = select(wk, pcost_budget=1.0)
+        name = f"tenant-{t}"
+        server.register_tenant(name, plan, rho=rho)
+        recs = synthetic_records(dom, RECORDS, seed=t)
+        tenant_margs[name] = marginals_from_records(dom, plan.cliques, recs)
+    return server, tenant_margs
+
+
+def _drive(server, tenant_margs, requests_per_tenant: int, seed0: int):
+    """Prefill the paused queue, release, drain; returns (wall_s, results)."""
+    from repro.serve import ReleaseRequest
+
+    server.pause()
+    futures = []
+    s = seed0
+    for _r in range(requests_per_tenant):
+        for tenant, margs in tenant_margs.items():
+            futures.append(server.submit(ReleaseRequest(
+                tenant=tenant, marginals=margs, seed=s)))
+            s += 1
+    t0 = time.perf_counter()
+    server.resume()
+    results = [f.result(timeout=600) for f in futures]
+    wall = time.perf_counter() - t0
+    return wall, results
+
+
+def run(fast: bool = True) -> None:
+    reps = 6 if fast else 25
+    tmp = tempfile.mkdtemp(prefix="serve_bench_")
+
+    seq_srv, margs = _setup(1, os.path.join(tmp, "seq.jsonl"))
+    _drive(seq_srv, margs, 1, seed0=10_000)          # warm compile caches
+    seq_wall, seq_res = _drive(seq_srv, margs, reps, seed0=0)
+    seq_srv.stop()
+
+    bat_srv, margs_b = _setup(16, os.path.join(tmp, "bat.jsonl"))
+    _drive(bat_srv, margs_b, 2, seed0=10_000)        # warm the 16-drain shapes
+    bat_wall, bat_res = _drive(bat_srv, margs_b, reps, seed0=0)
+    stats = bat_srv.stats_dict()
+    bat_srv.stop()
+
+    n = N_TENANTS * reps
+    seq_rps = n / seq_wall
+    bat_rps = n / bat_wall
+
+    # same seeds, same tenants: the fused path must be bit-identical
+    bit_exact = all(
+        set(a.tables) == set(b.tables) and all(
+            np.array_equal(a.tables[c], b.tables[c]) for c in a.tables)
+        for a, b in zip(seq_res, bat_res))
+
+    lat = np.asarray([r.latency_s for r in bat_res]) * 1e3
+    emit("serve/throughput/8tenants", bat_wall / n * 1e6,
+         f"{bat_rps:.1f} rps batched vs {seq_rps:.1f} sequential",
+         requests=n, tenants=N_TENANTS,
+         batched_rps=round(bat_rps, 2), sequential_rps=round(seq_rps, 2),
+         speedup_batched_vs_sequential=round(bat_rps / seq_rps, 3),
+         batch_occupancy=round(stats["batch_occupancy"], 3),
+         batched_launch_groups=stats["batched_launch_groups"],
+         p50_ms=round(float(np.percentile(lat, 50)), 3),
+         p99_ms=round(float(np.percentile(lat, 99)), 3),
+         bit_exact_vs_sequential=bool(bit_exact))
+
+    cache = stats["engine_cache"]
+    emit("serve/engine_cache/8tenants", 0.0,
+         f"hit rate {cache['hit_rate']:.3f}",
+         cache_hit_rate=round(cache["hit_rate"], 4),
+         cache_entries=cache["entries"], cache_evictions=cache["evictions"])
+
+    led = np.asarray([stats["ledger"][t]["pcost_spent"]
+                      for t in margs_b])
+    emit("serve/ledger/8tenants", 0.0,
+         f"{int(stats['ledger'][next(iter(margs_b))]['charges'])} charges/tenant",
+         charges_per_tenant=int(
+             stats["ledger"][next(iter(margs_b))]["charges"]),
+         pcost_spent_per_tenant=round(float(led[0]), 6),
+         all_tenants_equal_spend=bool(np.allclose(led, led[0])))

@@ -1,8 +1,70 @@
-"""Batched serving example: prefill + greedy decode with KV/state caches.
+"""Batched LM serving example: prefill + greedy decode with KV/state caches.
+
+Self-contained legacy driver for the seed's LM scaffolding (models/, configs/)
+— the ``repro.launch.serve`` module now hosts the *release* server app layer
+(docs/SERVING.md); this example keeps the decode-loop path runnable.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-2b --gen 12
 """
-from repro.launch.serve import main
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, load_all
+from repro.configs.shapes import reduced_config
+from repro.models import Model
+
+
+def serve_batch(cfg, prompts: np.ndarray, gen_tokens: int, seed: int = 0):
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    B, S = prompts.shape
+    cache_len = S + gen_tokens
+    batch = {"tokens": jnp.asarray(prompts)}
+    if cfg.frontend == "embed_stub":
+        batch = {"embeds": jax.random.normal(jax.random.PRNGKey(1),
+                                             (B, S, cfg.d_model), jnp.float32)}
+    if cfg.encoder_layers:
+        batch["enc_embeds"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
+                                        jnp.float32)
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
+    decode = jax.jit(model.decode_step)
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [np.asarray(tok)]
+    t1 = time.time()
+    for i in range(gen_tokens - 1):
+        logits, caches = decode(params, tok, caches, jnp.asarray(S + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    t2 = time.time()
+    toks = np.concatenate(out, axis=1)
+    return toks, {"prefill_s": t1 - t0,
+                  "decode_tok_per_s": B * (gen_tokens - 1) / max(t2 - t1, 1e-9)}
+
+
+def main():
+    load_all()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    cfg = reduced_config(args.arch)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
+    toks, stats = serve_batch(cfg, prompts, args.gen)
+    print(f"[serve] {args.arch}: generated {toks.shape} tokens; {stats}")
+
 
 if __name__ == "__main__":
     main()

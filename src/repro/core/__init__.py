@@ -20,8 +20,8 @@ from .reconstruct import (cross_marginal_covariance_dense,
                           reconstruct_all_batched, reconstruct_marginal,
                           reconstruct_marginal_fast, subset_slot_region,
                           u_chain_factors)
-from .accountant import (PrivacyBudget, approx_dp_delta, approx_dp_eps,
-                         gdp_mu, pcost_for_eps_delta, pcost_for_mu,
-                         pcost_for_rho, zcdp_rho)
+from .accountant import (BudgetExhausted, PrivacyBudget, approx_dp_delta,
+                         approx_dp_eps, gdp_mu, pcost_for_eps_delta,
+                         pcost_for_mu, pcost_for_rho, zcdp_rho)
 
 __all__ = [n for n in dir() if not n.startswith("_")]

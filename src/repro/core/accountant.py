@@ -107,6 +107,35 @@ def pcost_for_eps_delta(eps: float, delta: float, hi_cap: float = 1e12) -> float
     return lo
 
 
+class BudgetExhausted(ValueError):
+    """A charge would exceed the remaining privacy budget.
+
+    Subclasses ``ValueError`` for backward compatibility with callers that
+    catch the historical exception.  Carries the exact remaining budget in
+    both pcost and ρ-zCDP units so serving layers (the ledger, the release
+    server) can surface an actionable rejection without re-deriving it.
+    """
+
+    def __init__(self, requested_pcost: float, remaining_pcost: float,
+                 tenant: str = ""):
+        self.requested_pcost = float(requested_pcost)
+        self.remaining_pcost = float(remaining_pcost)
+        self.tenant = tenant
+        who = f" for tenant {tenant!r}" if tenant else ""
+        super().__init__(
+            f"privacy budget exhausted{who}: need pcost={self.requested_pcost:.12g} "
+            f"(rho={self.requested_rho:.12g}), have pcost={self.remaining_pcost:.12g} "
+            f"(rho={self.remaining_rho:.12g})")
+
+    @property
+    def requested_rho(self) -> float:
+        return zcdp_rho(self.requested_pcost)
+
+    @property
+    def remaining_rho(self) -> float:
+        return zcdp_rho(self.remaining_pcost)
+
+
 @dataclass
 class PrivacyBudget:
     """A total pcost budget with sequential-composition tracking."""
@@ -130,9 +159,16 @@ class PrivacyBudget:
     def remaining(self) -> float:
         return max(0.0, self.total_pcost - self.spent)
 
-    def charge(self, pcost: float) -> None:
-        if pcost > self.remaining + 1e-12:
-            raise ValueError(f"privacy budget exhausted: need {pcost}, have {self.remaining}")
+    @property
+    def remaining_rho(self) -> float:
+        return zcdp_rho(self.remaining)
+
+    def can_charge(self, pcost: float) -> bool:
+        return pcost <= self.remaining + 1e-12
+
+    def charge(self, pcost: float, tenant: str = "") -> None:
+        if not self.can_charge(pcost):
+            raise BudgetExhausted(pcost, self.remaining, tenant)
         self.spent += pcost
 
     def report(self) -> dict:

@@ -1,0 +1,135 @@
+"""Cross-request signature-batched measurement (the serving tier's fuse point).
+
+``measure`` (core/mechanism.py) batches the cliques of ONE plan by per-axis
+signature; this module generalizes the same trick across *requests*: the
+``[v; z]`` pairs of every (request, clique) whose signature matches — even
+when the requests come from different tenants with different plans and
+different budgets — stack into the batch axis of a single fused chain launch.
+Eight tenants asking for the same ≤2-way workload shape cost the same number
+of kernel launches as one tenant (docs/DESIGN.md §13).
+
+Bit-exactness contract: each request's noise is drawn from its own key with
+the exact fold order of the per-request path (``jax.random.split(key,
+len(plan.cliques))`` indexed by clique position), and vmapped threefry draws
+match per-key draws exactly — so ``measure_multi(items)`` returns
+measurement-for-measurement the same bits as calling ``measure(plan, margs,
+key)`` once per item.  The cross-tenant batching test and the serve benchmark
+both assert this.
+
+Only plain-marginal plans qualify (their chain is determined by the
+attribute-size signature alone); RP+/composite/secure plans are served
+per-request through their cached engines by the caller.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.domain import Clique
+from repro.core.kron import kron_matvec_batched
+from repro.core.mechanism import Measurement, noise_dtype
+from repro.core.residual import sub_matrix
+from repro.core.select import Plan
+
+MultiItem = Tuple[Plan, Mapping[Clique, jnp.ndarray], jax.Array]
+
+
+def can_fuse(plan) -> bool:
+    """True iff this plan's measurement chains are cross-request fusable.
+
+    Plain :class:`~repro.core.select.Plan` chains are fully determined by the
+    attribute-size signature, so two requests with equal signatures share one
+    chain.  RP+ plans carry per-attribute (Sub, Γ) factors and composite
+    plans fan out to block engines — both are served per-request.
+    """
+    return type(plan) is Plan
+
+
+def measure_multi(items: Sequence[MultiItem], use_kernel: bool = False,
+                  dtype=None) -> List[Dict[Clique, Measurement]]:
+    """Algorithm 1 for many requests at once: one chain launch per signature.
+
+    ``items[i] = (plan, marginals, key)`` exactly as the per-request
+    ``measure(plan, marginals, key)`` would receive them; the return value is
+    the list of per-request measurement dicts, bit-identical to the
+    per-request path.  Requests are grouped by attribute-size signature
+    ACROSS items, so the launch count is the number of distinct signatures in
+    the union — not the sum of per-request signature counts.
+    """
+    dtype = noise_dtype() if dtype is None else dtype
+    for plan, _m, _k in items:
+        if not can_fuse(plan):
+            raise ValueError(
+                f"measure_multi serves plain marginal plans only, got "
+                f"{type(plan).__name__}; route this request through "
+                f"plan.engine().measure")
+
+    # (signature dims) -> list of (item_idx, clique, per-clique key row).
+    # Keys are pulled host-side once per item; per-lane jax-array indexing
+    # would pay one dispatch per lane.
+    groups: Dict[tuple, List[tuple]] = defaultdict(list)
+    for i, (plan, _margs, key) in enumerate(items):
+        keys = np.asarray(jax.random.split(key, len(plan.cliques)))
+        for pos, c in enumerate(plan.cliques):
+            dims = tuple(plan.domain.attributes[a].size for a in c)
+            groups[dims].append((i, c, keys[pos]))
+
+    out: List[Dict[Clique, Measurement]] = [dict() for _ in items]
+    for dims, members in groups.items():
+        m = int(np.prod(dims)) if dims else 1
+        # Lane assembly happens HOST-SIDE in one numpy stack + ONE device
+        # transfer per group: a per-lane jnp.asarray/jnp.stack loop costs
+        # ~0.5 ms of eager dispatch per lane, which at hundreds of lanes per
+        # batch would swamp the launch savings the fusion exists to deliver.
+        vs, sig2s = [], []
+        for i, c, _k in members:
+            v = np.asarray(items[i][1][c]).reshape(-1)
+            if v.shape[0] != m:
+                raise ValueError(
+                    f"marginal for {c} (request {i}) has {v.shape[0]} cells, "
+                    f"want {m}")
+            vs.append(v)
+            sig2s.append(items[i][0].sigmas[c])
+        # Lane-count bucketing: pad g up to a power of two (min 8) so the
+        # chain shapes repeat across drains of different sizes — otherwise
+        # every new batch size pays a fresh per-shape XLA compile (~1 s for
+        # a 16-request drain) that dwarfs the launch savings.  Pad lanes are
+        # zero marginals with a recycled key; their outputs are sliced away,
+        # and row-independence of the batched contraction keeps the real
+        # lanes bit-identical to the unpadded launch (test-enforced).
+        g = len(members)
+        g_pad = 8
+        while g_pad < g:
+            g_pad *= 2
+        vnp = np.stack(vs)
+        if g_pad > g:
+            vnp = np.concatenate(
+                [vnp, np.zeros((g_pad - g, m), vnp.dtype)], axis=0)
+        vstack = jnp.asarray(vnp, dtype=dtype)                   # (g_pad, m)
+        keys_np = np.stack([k for _i, _c, k in members])
+        if g_pad > g:
+            keys_np = np.concatenate(
+                [keys_np, np.repeat(keys_np[:1], g_pad - g, axis=0)], axis=0)
+        z = jax.vmap(lambda k: jax.random.normal(k, (m,), dtype=dtype))(
+            jnp.asarray(keys_np))
+        sig = jnp.asarray(np.sqrt(np.asarray(sig2s))[:, None], dtype=dtype)
+        if not dims:
+            om = vstack[:g] + sig * z[:g]
+        else:
+            x = jnp.concatenate([vstack, z], axis=0)             # (2·g_pad, m)
+            factors = [sub_matrix(n) for n in dims]
+            if use_kernel:
+                from repro.kernels.kron_matvec.fused import fused_chain_matvec
+                y = fused_chain_matvec(factors, x, dims)
+            else:
+                y = kron_matvec_batched(factors, x, dims)
+            om = y[:g] + sig * y[g_pad:g_pad + g]
+        om_host = np.asarray(om)
+        for j, (i, c, _k) in enumerate(members):
+            out[i][c] = Measurement(c, om_host[j], sig2s[j])
+    return out

@@ -59,6 +59,13 @@ class _EngineCache:
     ``misses`` aggregate across entries; each served engine's own
     ``EngineStats`` additionally records its per-engine ``cache_hits`` /
     ``cache_misses`` provenance.
+
+    Warm-pool hooks (docs/DESIGN.md §13): ``pin``/``unpin`` exempt an entry
+    from eviction (a full cache of pinned entries still evicts LRU — pins are
+    advisory, counted in ``forced_evictions``), and an ``evict_score``
+    callback, when set, picks the victim with the LOWEST score among unpinned
+    entries (ties broken LRU) instead of pure LRU — the release server's
+    :class:`~repro.serve.pool.EnginePool` scores by tenant-weighted use.
     """
 
     def __init__(self, maxsize: Optional[int] = None):
@@ -67,6 +74,10 @@ class _EngineCache:
             raise ValueError(f"cache maxsize must be >= 1, got {maxsize}")
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.forced_evictions = 0
+        self.evict_score = None        # Optional[Callable[[tuple], float]]
+        self._pinned: set = set()
         self._entries: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._finalized: set = set()
 
@@ -107,6 +118,7 @@ class _EngineCache:
                 r() is not c for r, c in zip(child_refs, children))
         if stale:
             del self._entries[key]
+            self._pinned.discard(key)
             self.misses += 1
             return None
         self._entries.move_to_end(key)
@@ -120,7 +132,7 @@ class _EngineCache:
             secure: bool = False, digits: int = 4) -> None:
         key = self._key(plan, use_kernel, dtype, secure, digits)
         while len(self._entries) >= self.maxsize:
-            self._entries.popitem(last=False)       # LRU, one at a time
+            self._evict_one()
         self._entries[key] = (weakref.ref(plan),
                               tuple(weakref.ref(c)
                                     for c in self._child_plans(plan)),
@@ -128,6 +140,42 @@ class _EngineCache:
         if id(plan) not in self._finalized:
             self._finalized.add(id(plan))
             weakref.finalize(plan, self._drop_plan, id(plan))
+
+    def _evict_one(self) -> None:
+        """Evict one entry: lowest evict_score among unpinned (ties → LRU),
+        else LRU among unpinned, else LRU outright (advisory pins)."""
+        candidates = [k for k in self._entries if k not in self._pinned]
+        if not candidates:                          # everything pinned
+            self.forced_evictions += 1
+            victim = next(iter(self._entries))      # oldest = LRU
+        elif self.evict_score is not None:
+            victim = min(candidates, key=lambda k: (
+                self.evict_score(k), list(self._entries).index(k)))
+        else:
+            victim = candidates[0]                  # LRU among unpinned
+        del self._entries[victim]
+        self._pinned.discard(victim)
+        self.evictions += 1
+
+    # ---------------------------------------------------------- warm pool
+    def pin(self, plan, use_kernel: bool, dtype, secure: bool = False,
+            digits: int = 4) -> None:
+        self._pinned.add(self._key(plan, use_kernel, dtype, secure, digits))
+
+    def unpin(self, plan, use_kernel: bool, dtype, secure: bool = False,
+              digits: int = 4) -> None:
+        self._pinned.discard(self._key(plan, use_kernel, dtype, secure,
+                                       digits))
+
+    def snapshot(self) -> list:
+        """One dict per live entry (for /stats): key fields + pin state."""
+        rows = []
+        for key in self._entries:
+            (pid, child_ids), use_kernel, dtype, secure, digits = key
+            rows.append(dict(plan_id=pid, n_children=len(child_ids),
+                             use_kernel=use_kernel, dtype=dtype,
+                             secure=secure, pinned=key in self._pinned))
+        return rows
 
     def _drop_plan(self, pid: int) -> None:
         # Drop entries OWNED by this plan id, and composite entries that held
@@ -140,6 +188,7 @@ class _EngineCache:
         for k in [k for k in self._entries
                   if k[0][0] == pid or pid in k[0][1]]:
             del self._entries[k]
+            self._pinned.discard(k)
 
 
 # Engines cached per (plan, path, dtype, secure): repeated sharded_measure

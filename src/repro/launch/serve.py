@@ -1,64 +1,111 @@
-"""Batched serving driver: prefill a batch of prompts, then step the decode
-loop (greedy) against the shared KV cache — the serving-shape path exercised
-by the decode_32k / long_500k dry-run cells."""
+"""Release-server app layer: stand up the multi-tenant serving tier.
+
+Wires a :class:`~repro.serve.server.ReleaseServer` (async queue + worker
+loop, cross-tenant signature batching), a durable
+:class:`~repro.serve.ledger.BudgetLedger` (JSONL journal, crash-recovery
+replay), and the stdlib ``/stats`` / ``/ledger`` HTTP endpoints into one
+runnable process.  See docs/SERVING.md for the tenant lifecycle and client
+walkthrough; the historical LM decode-serving driver this module used to
+host lives in ``examples/serve_lm.py``.
+
+Run (demo traffic, then keep serving /stats until interrupted)::
+
+    PYTHONPATH=src python -m repro.launch.serve --tenants 4 --requests 8 \
+        --ledger /tmp/ledger.jsonl --port 8787
+
+``--once`` exits after the demo traffic instead of serving forever.
+"""
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs import ARCH_IDS, load_all
-from repro.configs.shapes import reduced_config
-from repro.models import Model, get_config
+from repro.core import all_kway, select
+from repro.data.tabular import (adult_domain, marginals_from_records,
+                                synthetic_records)
+from repro.serve import (BudgetLedger, ReleaseRequest, ReleaseServer,
+                         start_stats_http)
 
 
-def serve_batch(cfg, prompts: np.ndarray, gen_tokens: int, seed: int = 0):
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-    B, S = prompts.shape
-    cache_len = S + gen_tokens
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.frontend == "embed_stub":
-        batch = {"embeds": jax.random.normal(jax.random.PRNGKey(1),
-                                             (B, S, cfg.d_model), jnp.float32)}
-    if cfg.encoder_layers:
-        batch["enc_embeds"] = jnp.zeros((B, cfg.encoder_seq, cfg.d_model),
-                                        jnp.float32)
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, cache_len=cache_len))
-    decode = jax.jit(model.decode_step)
-    t0 = time.time()
-    logits, caches = prefill(params, batch)
-    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-    out = [np.asarray(tok)]
-    t1 = time.time()
-    for i in range(gen_tokens - 1):
-        logits, caches = decode(params, tok, caches, jnp.asarray(S + i))
-        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        out.append(np.asarray(tok))
-    jax.block_until_ready(tok)
-    t2 = time.time()
-    toks = np.concatenate(out, axis=1)
-    return toks, {"prefill_s": t1 - t0,
-                  "decode_tok_per_s": B * (gen_tokens - 1) / max(t2 - t1, 1e-9)}
+def build_server(ledger_path: str, n_tenants: int = 4, rho: float = 4.0,
+                 max_batch: int = 16, max_wait_ms: float = 2.0,
+                 kway: int = 2) -> ReleaseServer:
+    """A server with ``n_tenants`` tenants sharing one workload *shape*.
+
+    Every tenant gets its own plan object, its own synthetic records, and its
+    own ρ budget — but the per-axis signatures coincide, so concurrent
+    requests fuse into shared chain launches (docs/DESIGN.md §13).
+    """
+    dom = adult_domain()
+    ledger = BudgetLedger(ledger_path)
+    server = ReleaseServer(ledger, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms)
+    server.start()
+    for t in range(n_tenants):
+        wk = all_kway(dom, kway, include_lower=True)
+        plan = select(wk, pcost_budget=1.0)
+        server.register_tenant(f"tenant-{t}", plan, rho=rho)
+    return server
 
 
-def main():
-    load_all()
+def demo_traffic(server: ReleaseServer, requests_per_tenant: int = 4,
+                 n_records: int = 60_000) -> dict:
+    """Submit release traffic from every tenant; returns summary metrics."""
+    dom = adult_domain()
+    futures = []
+    t0 = time.monotonic()
+    for i, tenant in enumerate(server.tenants()):
+        plan = server._sessions[tenant].plan
+        records = synthetic_records(dom, n_records, seed=i)
+        margs = marginals_from_records(dom, plan.cliques, records)
+        for _r in range(requests_per_tenant):
+            futures.append(server.submit(
+                ReleaseRequest(tenant=tenant, marginals=margs)))
+    results = [f.result(timeout=300) for f in futures]
+    wall = time.monotonic() - t0
+    return {"requests": len(results), "wall_s": wall,
+            "requests_per_s": len(results) / max(wall, 1e-9),
+            "batched_fraction": sum(r.batched for r in results) / len(results)}
+
+
+def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-4b", choices=list(ARCH_IDS))
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--ledger", default="/tmp/repro_ledger.jsonl",
+                    help="JSONL journal path (replayed if it exists)")
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--rho", type=float, default=4.0,
+                    help="per-tenant zCDP budget")
+    ap.add_argument("--requests", type=int, default=4,
+                    help="demo requests per tenant")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--port", type=int, default=0,
+                    help="stats HTTP port (0 = ephemeral)")
+    ap.add_argument("--once", action="store_true",
+                    help="exit after the demo traffic (no serve-forever)")
     args = ap.parse_args()
-    cfg = reduced_config(args.arch)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)).astype(np.int32)
-    toks, stats = serve_batch(cfg, prompts, args.gen)
-    print(f"[serve] {args.arch}: generated {toks.shape} tokens; {stats}")
+
+    server = build_server(args.ledger, args.tenants, rho=args.rho,
+                          max_batch=args.max_batch)
+    httpd, port = start_stats_http(server, port=args.port)
+    print(f"[serve] {args.tenants} tenants registered; "
+          f"ledger={args.ledger} (replayed "
+          f"{server.ledger.replayed_records} records); "
+          f"stats on http://127.0.0.1:{port}/stats")
+    summary = demo_traffic(server, args.requests)
+    print(f"[serve] demo traffic: {json.dumps(summary)}")
+    print("[serve] ledger:", json.dumps(server.ledger.report(), default=str))
+    if args.once:
+        httpd.shutdown()
+        server.stop()
+        return
+    print("[serve] serving /stats until interrupted (ctrl-C)")
+    try:
+        while True:
+            time.sleep(3600)
+    except KeyboardInterrupt:
+        httpd.shutdown()
+        server.stop()
 
 
 if __name__ == "__main__":

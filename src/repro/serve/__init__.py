@@ -1,0 +1,21 @@
+"""Multi-tenant release serving tier (docs/DESIGN.md §13, docs/SERVING.md).
+
+* :mod:`repro.serve.ledger` — durable per-tenant zCDP budget ledger
+  (append-only JSONL journal, charge-before-measure, crash-recovery replay);
+* :mod:`repro.serve.server` — async request queue + worker loop with
+  cross-tenant signature batching over :func:`repro.engine.multi.measure_multi`;
+* :mod:`repro.serve.pool` — engine warm pool (pin hot signatures, evict by
+  tenant-weighted LRU) over the instrumented engine cache;
+* :mod:`repro.serve.stats` — per-tenant/server counters behind ``/stats``.
+"""
+from .ledger import (BudgetLedger, LedgerCorrupt, LedgerError, UnknownTenant)
+from .pool import EnginePool
+from .server import (ReleaseRequest, ReleaseResult, ReleaseServer,
+                     start_stats_http)
+from .stats import ServerStats, TenantStats
+
+__all__ = [
+    "BudgetLedger", "LedgerCorrupt", "LedgerError", "UnknownTenant",
+    "EnginePool", "ReleaseRequest", "ReleaseResult", "ReleaseServer",
+    "start_stats_http", "ServerStats", "TenantStats",
+]

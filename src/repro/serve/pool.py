@@ -1,0 +1,73 @@
+"""Engine warm pool: pin hot engines, evict by tenant-weighted LRU.
+
+Wraps a private :class:`~repro.engine.sharded._EngineCache` (same machinery
+the sharded path uses, so instrumentation and weakref hygiene are shared) and
+drives its warm-pool hooks from observed traffic:
+
+* every serve records (cache key, tenant); an entry's score is
+  ``Σ_t uses[key][t] / total_uses[t]`` — each tenant contributes the
+  *fraction of its own traffic* that hit this engine, so one hyperactive
+  tenant cannot starve the warm engines of everyone else;
+* the ``pin_count`` highest-scoring live entries are pinned (never evicted
+  while pinned — the "hot signatures" of the traffic mix);
+* a full cache evicts the lowest-scoring unpinned entry (ties → LRU) via the
+  cache's ``evict_score`` hook instead of pure LRU.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, Optional
+
+from repro.core.mechanism import noise_dtype
+from repro.engine.sharded import _EngineCache
+
+
+class EnginePool:
+    """Tenant-aware engine cache with pinning + weighted eviction."""
+
+    def __init__(self, maxsize: Optional[int] = None, pin_count: int = 2):
+        self.cache = _EngineCache(maxsize)
+        self.cache.evict_score = self._score
+        self.pin_count = int(pin_count)
+        self._uses: Dict[tuple, Dict[str, int]] = defaultdict(
+            lambda: defaultdict(int))
+        self._tenant_total: Dict[str, int] = defaultdict(int)
+
+    def engine_for(self, tenant: str, plan, use_kernel: bool = False,
+                   dtype=None, secure: bool = False, digits: int = 4):
+        """Cached compiled engine for ``plan``, accounted to ``tenant``."""
+        dtype = noise_dtype() if dtype is None else dtype
+        eng = self.cache.get(plan, use_kernel, dtype, secure, digits)
+        if eng is None:
+            eng = plan.engine(use_kernel=use_kernel, precompile=False,
+                              dtype=dtype, secure=secure, digits=digits)
+            eng.stats.cache_misses += 1
+            self.cache.put(plan, use_kernel, dtype, eng, secure, digits)
+        key = self.cache._key(plan, use_kernel, dtype, secure, digits)
+        self._uses[key][tenant] += 1
+        self._tenant_total[tenant] += 1
+        self._repin()
+        return eng
+
+    def _score(self, key: tuple) -> float:
+        return sum(n / self._tenant_total[t]
+                   for t, n in self._uses.get(key, {}).items()
+                   if self._tenant_total[t])
+
+    def _repin(self) -> None:
+        live = list(self.cache._entries)
+        # prune use counts for evicted/dead keys so scores track live traffic
+        for k in [k for k in self._uses if k not in self.cache._entries]:
+            del self._uses[k]
+        top = sorted(live, key=self._score, reverse=True)[:self.pin_count]
+        self.cache._pinned = set(top)
+
+    def stats(self) -> dict:
+        lookups = self.cache.hits + self.cache.misses
+        return {"entries": len(self.cache), "hits": self.cache.hits,
+                "misses": self.cache.misses,
+                "hit_rate": (self.cache.hits / lookups) if lookups else None,
+                "evictions": self.cache.evictions,
+                "forced_evictions": self.cache.forced_evictions,
+                "pinned": len(self.cache._pinned),
+                "snapshot": self.cache.snapshot()}

@@ -1,0 +1,410 @@
+"""Async multi-tenant release server: queue → charge → fuse → serve.
+
+The worker loop drains the request queue in small batches (up to
+``max_batch`` requests, waiting at most ``max_wait_ms`` after the first to
+let a batch fill), then serves a batch in three phases:
+
+1. **charge** — every request is charged against its tenant's durable ledger
+   *before anything is measured* (charge-before-measure,
+   :mod:`repro.serve.ledger`).  Over-budget requests fail immediately with
+   the exact remaining ρ; their future carries the
+   :class:`~repro.core.accountant.BudgetExhausted`.
+2. **fuse** — charged release requests whose plans are cross-request fusable
+   (plain marginal plans, :func:`repro.engine.multi.can_fuse`) ride ONE
+   fused chain launch per distinct per-axis signature across the whole batch
+   (:func:`repro.engine.multi.measure_multi`); RP+/composite/secure requests
+   are served per-request through the tenant-weighted engine pool.
+3. **serve** — per-request reconstruction through the pooled compiled
+   engines, optional postprocessing (consistency / non-negativity), and
+   synthesis from the tenant's last non-negative release.
+
+Noise keys: a request with ``seed=None`` gets a key folded from the server's
+base key and a monotonically increasing request counter — two requests never
+share noise unless the caller explicitly forces a seed (tests do, to check
+batched/sequential bit-exactness).
+"""
+from __future__ import annotations
+
+import json
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core.accountant import BudgetExhausted
+from repro.core.domain import Clique
+from repro.core.mechanism import noise_dtype, pcost_of_plan
+from repro.engine.multi import can_fuse, measure_multi
+from repro.serve.ledger import BudgetLedger, UnknownTenant
+from repro.serve.pool import EnginePool
+from repro.serve.stats import ServerStats
+
+RELEASE_KINDS = ("marginal", "range")
+
+
+@dataclass
+class ReleaseRequest:
+    """One tenant request.
+
+    ``kind="marginal"`` / ``"range"`` release the tenant's registered
+    workload from the supplied exact marginal tables (``"range"`` merely
+    asserts the tenant holds an RP+ plan); ``kind="synthesis"`` samples
+    ``n_records`` rows from the tenant's last ``postprocess="nonneg"``
+    release (no new measurement → no budget charge).
+    """
+
+    tenant: str
+    kind: str = "marginal"
+    marginals: Optional[Mapping[Clique, np.ndarray]] = None
+    postprocess: Optional[str] = None
+    n_records: int = 0
+    seed: Optional[int] = None
+    cliques: Optional[Sequence[Clique]] = None    # reconstruct subset
+
+
+@dataclass
+class ReleaseResult:
+    """What a resolved request future carries."""
+
+    tenant: str
+    kind: str
+    tables: Optional[Dict[Clique, np.ndarray]] = None
+    measurements: Optional[dict] = None
+    records: Optional[np.ndarray] = None
+    pcost_charged: float = 0.0
+    batched: bool = False           # served inside a fused multi-request batch
+    batch_size: int = 1
+    latency_s: float = 0.0
+
+
+@dataclass
+class _TenantSession:
+    plan: object
+    secure: bool = False
+    digits: int = 4
+    synth_tables: Optional[dict] = None
+    pcost_per_release: float = 0.0
+
+
+@dataclass
+class _Pending:
+    request: ReleaseRequest
+    future: Future
+    t_submit: float
+    index: int                       # global request counter (noise fold)
+    session: Optional[_TenantSession] = None
+    measurements: Optional[dict] = None
+    batched: bool = False
+    charged: float = 0.0
+
+
+class ReleaseServer:
+    """Multi-tenant serving tier over the plan → measure → release pipeline.
+
+    Parameters
+    ----------
+    ledger:       durable per-tenant budget ledger (charge-before-measure).
+    max_batch:    worker drain size; 1 disables cross-tenant fusion.
+    max_wait_ms:  how long the worker lingers after the first request to let
+                  a batch fill (0 = serve whatever is already queued).
+    use_kernel:   route fused chains through the Pallas kernel (TPU) or the
+                  batched-jnp path (CPU default).
+    pool:         engine warm pool; default ``EnginePool()`` (capacity from
+                  ``REPRO_ENGINE_CACHE_SIZE``).
+    noise_seed:   base key for server-assigned per-request noise keys.
+    """
+
+    def __init__(self, ledger: BudgetLedger, max_batch: int = 16,
+                 max_wait_ms: float = 2.0, use_kernel: bool = False,
+                 dtype=None, pool: Optional[EnginePool] = None,
+                 noise_seed: int = 0):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.ledger = ledger
+        self.max_batch = int(max_batch)
+        self.max_wait_ms = float(max_wait_ms)
+        self.use_kernel = bool(use_kernel)
+        self.dtype = noise_dtype() if dtype is None else dtype
+        self.pool = EnginePool() if pool is None else pool
+        self.stats = ServerStats()
+        self._base_key = jax.random.PRNGKey(noise_seed)
+        self._sessions: Dict[str, _TenantSession] = {}
+        self._queue: "queue.Queue[_Pending]" = queue.Queue()
+        self._counter = 0
+        self._counter_lock = threading.Lock()
+        self._stop_evt = threading.Event()
+        self._resume_evt = threading.Event()
+        self._resume_evt.set()
+        self._worker: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ReleaseServer":
+        if self._worker is None or not self._worker.is_alive():
+            self._stop_evt.clear()
+            self._worker = threading.Thread(target=self._worker_loop,
+                                            name="release-server-worker",
+                                            daemon=True)
+            self._worker.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
+        if drain:
+            self._queue.join()
+        self._stop_evt.set()
+        if self._worker is not None:
+            self._worker.join(timeout)
+            self._worker = None
+
+    def pause(self) -> None:
+        """Hold the worker so the queue can be prefilled (tests, benchmarks)."""
+        self._resume_evt.clear()
+
+    def resume(self) -> None:
+        self._resume_evt.set()
+
+    def __enter__(self) -> "ReleaseServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=not any(exc))
+
+    # ------------------------------------------------------------- tenants
+    def register_tenant(self, tenant: str, plan, rho: Optional[float] = None,
+                        pcost: Optional[float] = None, secure: bool = False,
+                        digits: int = 4, warm: bool = True) -> None:
+        """Register a tenant: durable budget + serving plan (+ warm engine).
+
+        ``rho``/``pcost`` set the tenant's total budget exactly as
+        :meth:`BudgetLedger.register`.  ``secure=True`` serves this tenant
+        through the discrete-Gaussian engine (charged the exact discrete
+        pcost, always ≤ continuous).  ``warm=True`` compiles the engine into
+        the pool now so the first request is a cache hit.
+        """
+        self.ledger.register(tenant, rho=rho, pcost=pcost)
+        if secure:
+            from repro.core.discrete import discrete_pcost_of_plan
+            per_release = discrete_pcost_of_plan(plan)
+        else:
+            per_release = pcost_of_plan(plan)
+        self._sessions[tenant] = _TenantSession(
+            plan=plan, secure=secure, digits=digits,
+            pcost_per_release=per_release)
+        if warm:
+            self.pool.engine_for(tenant, plan, self.use_kernel, self.dtype,
+                                 secure, digits)
+
+    def tenants(self) -> tuple:
+        return tuple(self._sessions)
+
+    # -------------------------------------------------------------- submit
+    def submit(self, request: ReleaseRequest) -> Future:
+        """Enqueue a request; the returned future resolves to a
+        :class:`ReleaseResult` or raises the serving error (over-budget →
+        :class:`~repro.core.accountant.BudgetExhausted`)."""
+        if self._worker is None:
+            raise RuntimeError("server not started: call start() first")
+        fut: Future = Future()
+        with self._counter_lock:
+            idx = self._counter
+            self._counter += 1
+        self.stats.enqueue()
+        self._queue.put(_Pending(request, fut, time.monotonic(), idx))
+        return fut
+
+    def request_sync(self, request: ReleaseRequest,
+                     timeout: Optional[float] = 120.0) -> ReleaseResult:
+        return self.submit(request).result(timeout)
+
+    def stats_dict(self) -> dict:
+        return self.stats.to_dict(cache=self.pool.cache, ledger=self.ledger)
+
+    # -------------------------------------------------------------- worker
+    def _worker_loop(self) -> None:
+        while not self._stop_evt.is_set():
+            if not self._resume_evt.wait(timeout=0.05):
+                continue
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            # pause() may land while we were already blocked in get() above,
+            # past the resume check: hold the first request until resumed so
+            # a prefilled queue always drains as one batch.
+            while (not self._resume_evt.is_set()
+                   and not self._stop_evt.is_set()):
+                self._resume_evt.wait(timeout=0.05)
+            deadline = time.monotonic() + self.max_wait_ms / 1e3
+            while len(batch) < self.max_batch:
+                try:
+                    batch.append(self._queue.get(
+                        timeout=max(0.0, deadline - time.monotonic())))
+                except queue.Empty:
+                    break
+            self.stats.dequeue(len(batch))
+            try:
+                self._serve_batch(batch)
+            finally:
+                for _ in batch:
+                    self._queue.task_done()
+
+    def _key_for(self, p: _Pending) -> jax.Array:
+        if p.request.seed is not None:
+            return jax.random.PRNGKey(p.request.seed)
+        return jax.random.fold_in(self._base_key, p.index)
+
+    def _fail(self, p: _Pending, exc: Exception) -> None:
+        ts = self.stats.tenant(p.request.tenant)
+        ts.requests += 1
+        if isinstance(exc, BudgetExhausted):
+            ts.rejected_budget += 1
+        else:
+            ts.failed += 1
+        p.future.set_exception(exc)
+
+    def _serve_batch(self, batch) -> None:
+        # ---- phase 1: charge-before-measure ------------------------------
+        charged: list = []
+        for p in batch:
+            req = p.request
+            try:
+                sess = self._sessions.get(req.tenant)
+                if sess is None:
+                    raise UnknownTenant(req.tenant)
+                p.session = sess
+                if req.kind in RELEASE_KINDS:
+                    if req.marginals is None:
+                        raise ValueError(
+                            f"{req.kind!r} request needs marginals=")
+                    if req.kind == "range" and can_fuse(sess.plan):
+                        raise ValueError(
+                            "kind='range' needs an RP+ plan; this tenant "
+                            "registered a plain marginal plan")
+                    p.charged = sess.pcost_per_release
+                    self.ledger.charge(req.tenant, p.charged,
+                                       request_id=f"req-{p.index}")
+                elif req.kind == "synthesis":
+                    if sess.synth_tables is None:
+                        raise ValueError(
+                            "no non-negative release to sample from: submit "
+                            "a release with postprocess='nonneg' first")
+                    p.charged = 0.0          # postprocessing only
+                else:
+                    raise ValueError(f"unknown request kind {req.kind!r}")
+                charged.append(p)
+            except Exception as exc:         # noqa: BLE001 — fail THIS request
+                self._fail(p, exc)
+
+        # ---- phase 2: fuse same-signature release traffic ----------------
+        fusable = [p for p in charged
+                   if p.request.kind in RELEASE_KINDS
+                   and can_fuse(p.session.plan) and not p.session.secure]
+        fused_groups = 0
+        if len(fusable) >= 2:
+            items = [(p.session.plan, p.request.marginals, self._key_for(p))
+                     for p in fusable]
+            measured = measure_multi(items, use_kernel=self.use_kernel,
+                                     dtype=self.dtype)
+            sigs = set()
+            for plan, _m, _k in items:
+                for c in plan.cliques:
+                    sigs.add(tuple(plan.domain.attributes[a].size for a in c))
+            fused_groups = len(sigs)
+            for p, meas in zip(fusable, measured):
+                p.measurements = meas
+                p.batched = True
+        self.stats.record_batch(len(batch), fused_groups)
+
+        # ---- phase 3: per-request serve ----------------------------------
+        for p in charged:
+            try:
+                result = self._serve_one(p, len(batch))
+            except Exception as exc:         # noqa: BLE001 — fail THIS request
+                self._fail(p, exc)
+            else:
+                ts = self.stats.tenant(p.request.tenant)
+                ts.requests += 1
+                ts.completed += 1
+                if p.batched:
+                    ts.batched_requests += 1
+                ts.record_latency(result.latency_s)
+                p.future.set_result(result)
+
+    def _serve_one(self, p: _Pending, batch_size: int) -> ReleaseResult:
+        req, sess = p.request, p.session
+        if req.kind == "synthesis":
+            from repro.release import synthesize_records
+            records = synthesize_records(sess.plan.domain, sess.synth_tables,
+                                         req.n_records, self._key_for(p))
+            return ReleaseResult(req.tenant, req.kind, records=records,
+                                 batch_size=batch_size,
+                                 latency_s=time.monotonic() - p.t_submit)
+        engine = self.pool.engine_for(req.tenant, sess.plan, self.use_kernel,
+                                      self.dtype, sess.secure, sess.digits)
+        meas = p.measurements
+        if meas is None:                      # solo path (RP+/secure/batch=1)
+            meas = engine.measure(req.marginals, self._key_for(p))
+        tables = engine.reconstruct(meas, req.cliques) if req.cliques \
+            else engine.reconstruct(meas)
+        if req.postprocess is not None:
+            engine._check_postprocess()
+            from repro.release import postprocess_release
+            tables = postprocess_release(
+                sess.plan, tables, req.postprocess,
+                total=engine._postprocess_total(meas))
+            engine.stats.postprocess_calls += 1
+            if req.postprocess == "nonneg":
+                sess.synth_tables = tables
+        return ReleaseResult(req.tenant, req.kind, tables=tables,
+                             measurements=meas, pcost_charged=p.charged,
+                             batched=p.batched, batch_size=batch_size,
+                             latency_s=time.monotonic() - p.t_submit)
+
+
+# --------------------------------------------------------------------- http
+class _StatsHandler(BaseHTTPRequestHandler):
+    server_ref: Optional[ReleaseServer] = None
+
+    def log_message(self, *args) -> None:   # silence per-request stderr spam
+        pass
+
+    def do_GET(self) -> None:               # noqa: N802 (stdlib API name)
+        srv = self.server_ref
+        path = self.path.split("?", 1)[0].rstrip("/") or "/"
+        if path == "/stats":
+            body = json.dumps(srv.stats_dict(), indent=2, default=str)
+        elif path == "/ledger":
+            body = json.dumps(srv.ledger.report(), indent=2, default=str)
+        elif path in ("/", "/healthz"):
+            body = json.dumps({"ok": True, "tenants": list(srv.tenants())})
+        else:
+            self.send_error(404)
+            return
+        data = body.encode()
+        self.send_response(200)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+
+def start_stats_http(server: ReleaseServer, host: str = "127.0.0.1",
+                     port: int = 0):
+    """Serve ``/stats``, ``/ledger``, ``/healthz`` for ``server``.
+
+    Returns ``(httpd, bound_port)``; the HTTP server runs on a daemon thread
+    (stdlib only — no framework dependency).  Port 0 binds an ephemeral port.
+    """
+    handler = type("_Bound", (_StatsHandler,), {"server_ref": server})
+    httpd = ThreadingHTTPServer((host, port), handler)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True,
+                         name="release-server-http")
+    t.start()
+    return httpd, httpd.server_address[1]

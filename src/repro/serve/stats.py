@@ -1,0 +1,112 @@
+"""Serving observability: per-tenant and server-wide counters for /stats.
+
+Latencies are kept in a bounded ring (default 4096 samples per tenant) so a
+long-lived server's stats stay O(1) memory; p50/p99 are computed over the
+ring on demand.  All mutation goes through the owning server's worker thread
+plus the submit path, so counters use a lock only where two threads race
+(queue depth at submit vs. drain).
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+
+def _percentiles(samples) -> dict:
+    if not samples:
+        return {"p50_ms": None, "p99_ms": None, "mean_ms": None}
+    arr = np.asarray(samples, dtype=np.float64) * 1e3
+    return {"p50_ms": float(np.percentile(arr, 50)),
+            "p99_ms": float(np.percentile(arr, 99)),
+            "mean_ms": float(arr.mean())}
+
+
+@dataclass
+class TenantStats:
+    """One tenant's serving counters."""
+
+    requests: int = 0              # accepted (completed or failed)
+    completed: int = 0
+    rejected_budget: int = 0       # BudgetExhausted at charge time
+    failed: int = 0                # non-budget errors
+    batched_requests: int = 0      # served inside a fused multi-request batch
+    _latencies: Deque[float] = field(
+        default_factory=lambda: deque(maxlen=4096))
+
+    def record_latency(self, seconds: float) -> None:
+        self._latencies.append(float(seconds))
+
+    def to_dict(self) -> dict:
+        d = {"requests": self.requests, "completed": self.completed,
+             "rejected_budget": self.rejected_budget, "failed": self.failed,
+             "batched_requests": self.batched_requests}
+        d.update(_percentiles(self._latencies))
+        return d
+
+
+class ServerStats:
+    """Server-wide counters + per-tenant breakdown.
+
+    ``batch_occupancy`` is the running mean number of requests per worker
+    drain — the direct measure of how much cross-tenant fusion the traffic
+    pattern allows (1.0 = purely sequential serving).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.tenants: Dict[str, TenantStats] = {}
+        self.batches = 0               # worker drains
+        self.batched_launch_groups = 0  # fused signature groups launched
+        self.queue_depth = 0
+        self.queue_depth_max = 0
+
+    def tenant(self, tenant: str) -> TenantStats:
+        with self._lock:
+            ts = self.tenants.get(tenant)
+            if ts is None:
+                ts = self.tenants[tenant] = TenantStats()
+            return ts
+
+    def enqueue(self) -> None:
+        with self._lock:
+            self.queue_depth += 1
+            self.queue_depth_max = max(self.queue_depth_max, self.queue_depth)
+
+    def dequeue(self, n: int) -> None:
+        with self._lock:
+            self.queue_depth = max(0, self.queue_depth - n)
+
+    def record_batch(self, size: int, fused_groups: int = 0) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batched_launch_groups += fused_groups
+
+    def to_dict(self, cache: Optional[object] = None,
+                ledger: Optional[object] = None) -> dict:
+        with self._lock:
+            total = sum(t.requests for t in self.tenants.values())
+            occ = (total / self.batches) if self.batches else 0.0
+            d = {
+                "requests_total": total,
+                "batches": self.batches,
+                "batch_occupancy": occ,
+                "batched_launch_groups": self.batched_launch_groups,
+                "queue_depth": self.queue_depth,
+                "queue_depth_max": self.queue_depth_max,
+                "tenants": {t: s.to_dict() for t, s in self.tenants.items()},
+            }
+        if cache is not None:
+            lookups = cache.hits + cache.misses
+            d["engine_cache"] = {
+                "hits": cache.hits, "misses": cache.misses,
+                "hit_rate": (cache.hits / lookups) if lookups else None,
+                "entries": len(cache), "evictions": cache.evictions,
+                "forced_evictions": cache.forced_evictions,
+            }
+        if ledger is not None:
+            d["ledger"] = ledger.report()
+        return d

@@ -1,0 +1,60 @@
+"""Docs stay navigable: no broken intra-repo links in README.md / docs/*.md.
+
+Runs the same checker CI's docs job runs (tools/check_doc_links.py), so a
+broken link fails locally before it fails in CI.
+"""
+import glob
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from check_doc_links import check_file, github_slug, main  # noqa: E402
+
+
+def test_github_slug_rules():
+    assert github_slug("Choose your path") == "choose-your-path"
+    assert github_slug("§13. The serving tier") == "13-the-serving-tier"
+    assert github_slug("`engine.release` / synthesize") == \
+        "enginerelease--synthesize"
+
+
+def test_no_broken_links_in_readme_and_docs():
+    files = ([os.path.join(REPO, "README.md")]
+             + sorted(glob.glob(os.path.join(REPO, "docs", "*.md"))))
+    assert files, "README.md not found?"
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, REPO))
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_broken_link(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](no_such_file.md) and "
+                   "[noanchor](bad.md#nope)\n# Real Heading\n")
+    errors = check_file(str(bad), str(tmp_path))
+    assert len(errors) == 2
+    assert "broken link target" in errors[0]
+    assert "missing anchor" in errors[1]
+
+
+def test_checker_skips_external_and_code_fences(tmp_path):
+    ok = tmp_path / "ok.md"
+    ok.write_text("[web](https://example.com)\n"
+                  "```\n[fake](never_checked.md)\n```\n"
+                  "[self](#real-heading)\n# Real Heading\n")
+    assert check_file(str(ok), str(tmp_path)) == []
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    good = tmp_path / "g.md"
+    good.write_text("# Hi\n")
+    assert main([str(good)]) == 0
+    bad = tmp_path / "b.md"
+    bad.write_text("[x](gone.md)\n")
+    assert main([str(bad)]) == 1
+    assert "broken link target" in capsys.readouterr().err

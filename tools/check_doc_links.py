@@ -1,0 +1,97 @@
+"""Fail on broken intra-repo links in markdown docs (CI: docs job).
+
+Checks every ``[text](target)`` and bare ``<target>`` link in the given
+markdown files.  External links (http/https/mailto) are skipped — CI must not
+flake on the network.  Relative targets are resolved against the containing
+file; ``#anchor`` fragments are validated against the GitHub-style slugs of
+the target file's headings.
+
+Usage::
+
+    python tools/check_doc_links.py README.md docs/*.md
+    python tools/check_doc_links.py            # default: README.md + docs/*.md
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+IMAGE_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces -> dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)   # linkified headings
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text, flags=re.UNICODE)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set:
+    with open(path, encoding="utf-8") as fh:
+        body = CODE_FENCE_RE.sub("", fh.read())
+    slugs, seen = set(), {}
+    for m in HEADING_RE.finditer(body):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_file(path: str, repo_root: str) -> list:
+    errors = []
+    with open(path, encoding="utf-8") as fh:
+        raw = fh.read()
+    body = CODE_FENCE_RE.sub("", raw)
+    targets = LINK_RE.findall(body) + IMAGE_RE.findall(body)
+    for target in targets:
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        base, _, frag = target.partition("#")
+        if not base:                                     # same-file anchor
+            dest = path
+        else:
+            dest = os.path.normpath(os.path.join(os.path.dirname(path), base))
+        rel = os.path.relpath(dest, repo_root)
+        in_repo = not os.path.relpath(os.path.abspath(path),
+                                      repo_root).startswith("..")
+        if in_repo and rel.startswith(".."):
+            errors.append(f"{path}: link escapes the repo: {target}")
+            continue
+        if not os.path.exists(dest):
+            errors.append(f"{path}: broken link target: {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            if frag not in heading_slugs(dest):
+                errors.append(f"{path}: missing anchor #{frag} in {rel} "
+                              f"(from link {target})")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if args:
+        files = args
+    else:
+        files = ([os.path.join(repo_root, "README.md")]
+                 + sorted(glob.glob(os.path.join(repo_root, "docs", "*.md"))))
+    errors = []
+    for f in files:
+        errors.extend(check_file(f, repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
