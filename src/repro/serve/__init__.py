@@ -8,14 +8,16 @@
   tenant-weighted LRU) over the instrumented engine cache;
 * :mod:`repro.serve.stats` — per-tenant/server counters behind ``/stats``.
 """
-from .ledger import (BudgetLedger, LedgerCorrupt, LedgerError, UnknownTenant)
+from .ledger import (BudgetLedger, LedgerCorrupt, LedgerError, LedgerFailed,
+                     UnknownTenant)
 from .pool import EnginePool
 from .server import (ReleaseRequest, ReleaseResult, ReleaseServer,
                      start_stats_http)
 from .stats import ServerStats, TenantStats
 
 __all__ = [
-    "BudgetLedger", "LedgerCorrupt", "LedgerError", "UnknownTenant",
+    "BudgetLedger", "LedgerCorrupt", "LedgerError", "LedgerFailed",
+    "UnknownTenant",
     "EnginePool", "ReleaseRequest", "ReleaseResult", "ReleaseServer",
     "start_stats_http", "ServerStats", "TenantStats",
 ]

@@ -21,7 +21,11 @@ released but the journal missed the charge.
 
 Journal format: one JSON object per line, ``op`` ∈ {``register``,
 ``charge``}.  Replay tolerates exactly one trailing partial line (a crash
-mid-append); corruption anywhere else raises :class:`LedgerCorrupt`.
+mid-append); corruption anywhere else raises :class:`LedgerCorrupt`.  A
+*failed* append (ENOSPC, I/O error) truncates the file back to its pre-write
+length so the partial record can never become a non-trailing line; if even
+the truncate fails, the ledger marks itself failed and refuses all further
+charges (:class:`LedgerFailed` — availability loss, never an under-charge).
 """
 from __future__ import annotations
 
@@ -43,6 +47,11 @@ class LedgerCorrupt(LedgerError):
     """A non-trailing journal line failed to parse — refuse to serve."""
 
 
+class LedgerFailed(LedgerError):
+    """A failed append could not be rolled back — the journal's on-disk tail
+    is unknown, so the ledger refuses every further write."""
+
+
 class UnknownTenant(LedgerError, KeyError):
     """Charge or query against a tenant id that was never registered."""
 
@@ -62,9 +71,12 @@ class BudgetLedger:
         self._lock = threading.Lock()
         self._budgets: Dict[str, PrivacyBudget] = {}
         self._charges: Dict[str, int] = {}          # per-tenant charge count
+        self._failed = False
         self._replayed = self._replay()
-        self._fh: Optional[io.TextIOBase] = open(self.path, "a",
-                                                 encoding="utf-8")
+        # Unbuffered binary append: tell() is a byte offset and a failed
+        # write leaves no hidden buffered tail, so _append can roll a
+        # partial record back with one ftruncate.
+        self._fh: Optional[io.RawIOBase] = open(self.path, "ab", buffering=0)
 
     # ------------------------------------------------------------- replay
     def _replay(self) -> int:
@@ -118,11 +130,35 @@ class BudgetLedger:
 
     # ------------------------------------------------------------- journal
     def _append(self, rec: dict) -> None:
-        """Durably append one record (caller holds the lock)."""
-        self._fh.write(json.dumps(rec, separators=(",", ":")) + "\n")
-        self._fh.flush()
-        if self.fsync:
-            os.fsync(self._fh.fileno())
+        """Durably append one record (caller holds the lock).
+
+        On any write/fsync failure the file is truncated back to its
+        pre-write length, so the journal never carries a non-trailing
+        partial line; the in-memory budget never advanced, so the failed
+        charge simply never happened.  If the truncate itself fails the
+        ledger is marked failed and every later append raises
+        :class:`LedgerFailed` rather than risk appending after a partial
+        record.
+        """
+        if self._failed:
+            raise LedgerFailed(
+                f"{self.path}: a failed append could not be rolled back; "
+                f"refusing further writes")
+        data = (json.dumps(rec, separators=(",", ":")) + "\n").encode("utf-8")
+        pos = self._fh.tell()
+        try:
+            n = self._fh.write(data)
+            if n != len(data):
+                raise OSError(f"short write: {n}/{len(data)} bytes")
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+        except Exception:
+            try:
+                os.ftruncate(self._fh.fileno(), pos)
+                self._fh.seek(pos)
+            except OSError:
+                self._failed = True
+            raise
 
     # -------------------------------------------------------------- public
     @property

@@ -15,6 +15,7 @@ drives its warm-pool hooks from observed traffic:
 """
 from __future__ import annotations
 
+import threading
 from collections import defaultdict
 from typing import Dict, Optional
 
@@ -23,12 +24,19 @@ from repro.engine.sharded import _EngineCache
 
 
 class EnginePool:
-    """Tenant-aware engine cache with pinning + weighted eviction."""
+    """Tenant-aware engine cache with pinning + weighted eviction.
+
+    Thread-safe: ``engine_for`` and ``stats`` serialize on one lock, so a
+    tenant registration warming an engine on the caller thread can never
+    corrupt the cache OrderedDict a running worker is using, and a /stats
+    snapshot never iterates entries mid-mutation.
+    """
 
     def __init__(self, maxsize: Optional[int] = None, pin_count: int = 2):
         self.cache = _EngineCache(maxsize)
         self.cache.evict_score = self._score
         self.pin_count = int(pin_count)
+        self._lock = threading.Lock()
         self._uses: Dict[tuple, Dict[str, int]] = defaultdict(
             lambda: defaultdict(int))
         self._tenant_total: Dict[str, int] = defaultdict(int)
@@ -37,17 +45,18 @@ class EnginePool:
                    dtype=None, secure: bool = False, digits: int = 4):
         """Cached compiled engine for ``plan``, accounted to ``tenant``."""
         dtype = noise_dtype() if dtype is None else dtype
-        eng = self.cache.get(plan, use_kernel, dtype, secure, digits)
-        if eng is None:
-            eng = plan.engine(use_kernel=use_kernel, precompile=False,
-                              dtype=dtype, secure=secure, digits=digits)
-            eng.stats.cache_misses += 1
-            self.cache.put(plan, use_kernel, dtype, eng, secure, digits)
-        key = self.cache._key(plan, use_kernel, dtype, secure, digits)
-        self._uses[key][tenant] += 1
-        self._tenant_total[tenant] += 1
-        self._repin()
-        return eng
+        with self._lock:
+            eng = self.cache.get(plan, use_kernel, dtype, secure, digits)
+            if eng is None:
+                eng = plan.engine(use_kernel=use_kernel, precompile=False,
+                                  dtype=dtype, secure=secure, digits=digits)
+                eng.stats.cache_misses += 1
+                self.cache.put(plan, use_kernel, dtype, eng, secure, digits)
+            key = self.cache._key(plan, use_kernel, dtype, secure, digits)
+            self._uses[key][tenant] += 1
+            self._tenant_total[tenant] += 1
+            self._repin()
+            return eng
 
     def _score(self, key: tuple) -> float:
         return sum(n / self._tenant_total[t]
@@ -63,11 +72,13 @@ class EnginePool:
         self.cache._pinned = set(top)
 
     def stats(self) -> dict:
-        lookups = self.cache.hits + self.cache.misses
-        return {"entries": len(self.cache), "hits": self.cache.hits,
-                "misses": self.cache.misses,
-                "hit_rate": (self.cache.hits / lookups) if lookups else None,
-                "evictions": self.cache.evictions,
-                "forced_evictions": self.cache.forced_evictions,
-                "pinned": len(self.cache._pinned),
-                "snapshot": self.cache.snapshot()}
+        with self._lock:
+            lookups = self.cache.hits + self.cache.misses
+            return {"entries": len(self.cache), "hits": self.cache.hits,
+                    "misses": self.cache.misses,
+                    "hit_rate": (self.cache.hits / lookups) if lookups
+                    else None,
+                    "evictions": self.cache.evictions,
+                    "forced_evictions": self.cache.forced_evictions,
+                    "pinned": len(self.cache._pinned),
+                    "snapshot": self.cache.snapshot()}

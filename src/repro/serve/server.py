@@ -4,10 +4,12 @@ The worker loop drains the request queue in small batches (up to
 ``max_batch`` requests, waiting at most ``max_wait_ms`` after the first to
 let a batch fill), then serves a batch in three phases:
 
-1. **charge** — every request is charged against its tenant's durable ledger
-   *before anything is measured* (charge-before-measure,
-   :mod:`repro.serve.ledger`).  Over-budget requests fail immediately with
-   the exact remaining ρ; their future carries the
+1. **validate + charge** — every request's marginals are validated against
+   the tenant's plan closure (keys + cell counts), and only then charged
+   against the durable ledger *before anything is measured*
+   (charge-before-measure, :mod:`repro.serve.ledger`) — a malformed request
+   never burns budget.  Over-budget requests fail immediately with the exact
+   remaining ρ; their future carries the
    :class:`~repro.core.accountant.BudgetExhausted`.
 2. **fuse** — charged release requests whose plans are cross-request fusable
    (plain marginal plans, :func:`repro.engine.multi.can_fuse`) ride ONE
@@ -136,6 +138,7 @@ class ReleaseServer:
         self.stats = ServerStats()
         self._base_key = jax.random.PRNGKey(noise_seed)
         self._sessions: Dict[str, _TenantSession] = {}
+        self._sessions_lock = threading.Lock()
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
         self._counter = 0
         self._counter_lock = threading.Lock()
@@ -155,7 +158,8 @@ class ReleaseServer:
         return self
 
     def stop(self, drain: bool = True, timeout: float = 30.0) -> None:
-        if drain:
+        # joining the queue of a dead worker would hang forever
+        if drain and self._worker is not None and self._worker.is_alive():
             self._queue.join()
         self._stop_evt.set()
         if self._worker is not None:
@@ -186,6 +190,9 @@ class ReleaseServer:
         through the discrete-Gaussian engine (charged the exact discrete
         pcost, always ≤ continuous).  ``warm=True`` compiles the engine into
         the pool now so the first request is a cache hit.
+
+        Thread-safe against a running worker: the session map and the engine
+        pool are lock-guarded, so tenants may be registered mid-traffic.
         """
         self.ledger.register(tenant, rho=rho, pcost=pcost)
         if secure:
@@ -193,23 +200,28 @@ class ReleaseServer:
             per_release = discrete_pcost_of_plan(plan)
         else:
             per_release = pcost_of_plan(plan)
-        self._sessions[tenant] = _TenantSession(
-            plan=plan, secure=secure, digits=digits,
-            pcost_per_release=per_release)
+        with self._sessions_lock:
+            self._sessions[tenant] = _TenantSession(
+                plan=plan, secure=secure, digits=digits,
+                pcost_per_release=per_release)
         if warm:
             self.pool.engine_for(tenant, plan, self.use_kernel, self.dtype,
                                  secure, digits)
 
     def tenants(self) -> tuple:
-        return tuple(self._sessions)
+        with self._sessions_lock:
+            return tuple(self._sessions)
 
     # -------------------------------------------------------------- submit
     def submit(self, request: ReleaseRequest) -> Future:
         """Enqueue a request; the returned future resolves to a
         :class:`ReleaseResult` or raises the serving error (over-budget →
         :class:`~repro.core.accountant.BudgetExhausted`)."""
-        if self._worker is None:
-            raise RuntimeError("server not started: call start() first")
+        if self._worker is None or not self._worker.is_alive():
+            raise RuntimeError(
+                "server worker is not running: call start() first (a worker "
+                "that was running has died or been stopped — restarting via "
+                "start() is safe; queued budget charges are already durable)")
         fut: Future = Future()
         with self._counter_lock:
             idx = self._counter
@@ -251,6 +263,13 @@ class ReleaseServer:
             self.stats.dequeue(len(batch))
             try:
                 self._serve_batch(batch)
+            except Exception as exc:   # noqa: BLE001 — never kill the worker
+                # _serve_batch fails individual requests through their
+                # futures; anything escaping it is a bug, but dying here
+                # would strand every in-flight future (and deadlock
+                # stop(drain=True)), so deliver the error and keep serving.
+                for p in batch:
+                    self._fail(p, exc)
             finally:
                 for _ in batch:
                     self._queue.task_done()
@@ -261,6 +280,8 @@ class ReleaseServer:
         return jax.random.fold_in(self._base_key, p.index)
 
     def _fail(self, p: _Pending, exc: Exception) -> None:
+        if p.future.done():            # already resolved (or failed) earlier
+            return
         ts = self.stats.tenant(p.request.tenant)
         ts.requests += 1
         if isinstance(exc, BudgetExhausted):
@@ -269,13 +290,36 @@ class ReleaseServer:
             ts.failed += 1
         p.future.set_exception(exc)
 
+    @staticmethod
+    def _validate_marginals(sess: _TenantSession, req: ReleaseRequest) -> None:
+        """Reject malformed marginals BEFORE any budget is charged.
+
+        Every clique of the tenant's plan closure must be present with the
+        right cell count — the same contract every engine's ``measure``
+        enforces, checked here so a malformed-but-present payload fails
+        without burning the tenant's budget.
+        """
+        plan = sess.plan
+        for c in plan.cliques:
+            if c not in req.marginals:
+                raise ValueError(
+                    f"marginals missing clique {c!r}: the plan closure "
+                    f"needs all of {list(plan.cliques)!r} (nothing charged)")
+            got = int(np.asarray(req.marginals[c]).size)
+            want = plan.domain.n_cells(c)
+            if got != want:
+                raise ValueError(
+                    f"marginal for {c!r} has {got} cells, want {want} "
+                    f"(nothing charged)")
+
     def _serve_batch(self, batch) -> None:
-        # ---- phase 1: charge-before-measure ------------------------------
+        # ---- phase 1: validate, then charge-before-measure ---------------
         charged: list = []
         for p in batch:
             req = p.request
             try:
-                sess = self._sessions.get(req.tenant)
+                with self._sessions_lock:
+                    sess = self._sessions.get(req.tenant)
                 if sess is None:
                     raise UnknownTenant(req.tenant)
                 p.session = sess
@@ -287,6 +331,7 @@ class ReleaseServer:
                         raise ValueError(
                             "kind='range' needs an RP+ plan; this tenant "
                             "registered a plain marginal plan")
+                    self._validate_marginals(sess, req)
                     p.charged = sess.pcost_per_release
                     self.ledger.charge(req.tenant, p.charged,
                                        request_id=f"req-{p.index}")
@@ -310,16 +355,26 @@ class ReleaseServer:
         if len(fusable) >= 2:
             items = [(p.session.plan, p.request.marginals, self._key_for(p))
                      for p in fusable]
-            measured = measure_multi(items, use_kernel=self.use_kernel,
-                                     dtype=self.dtype)
-            sigs = set()
-            for plan, _m, _k in items:
-                for c in plan.cliques:
-                    sigs.add(tuple(plan.domain.attributes[a].size for a in c))
-            fused_groups = len(sigs)
-            for p, meas in zip(fusable, measured):
-                p.measurements = meas
-                p.batched = True
+            try:
+                measured = measure_multi(items, use_kernel=self.use_kernel,
+                                         dtype=self.dtype)
+            except Exception:          # noqa: BLE001 — fused path is optional
+                # Phase-1 validation makes this unreachable for bad request
+                # payloads, but an unexpected fused-path failure must not
+                # strand already-charged futures: fall back to the solo path
+                # (p.measurements stays None), where a genuinely bad request
+                # fails alone in phase 3 and the rest of the batch serves.
+                pass
+            else:
+                sigs = set()
+                for plan, _m, _k in items:
+                    for c in plan.cliques:
+                        sigs.add(tuple(plan.domain.attributes[a].size
+                                       for a in c))
+                fused_groups = len(sigs)
+                for p, meas in zip(fusable, measured):
+                    p.measurements = meas
+                    p.batched = True
         self.stats.record_batch(len(batch), fused_groups)
 
         # ---- phase 3: per-request serve ----------------------------------

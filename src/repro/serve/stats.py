@@ -4,7 +4,7 @@ Latencies are kept in a bounded ring (default 4096 samples per tenant) so a
 long-lived server's stats stay O(1) memory; p50/p99 are computed over the
 ring on demand.  All mutation goes through the owning server's worker thread
 plus the submit path, so counters use a lock only where two threads race
-(queue depth at submit vs. drain).
+(queue depth at submit vs. drain; the latency ring vs. the /stats reader).
 """
 from __future__ import annotations
 
@@ -27,7 +27,12 @@ def _percentiles(samples) -> dict:
 
 @dataclass
 class TenantStats:
-    """One tenant's serving counters."""
+    """One tenant's serving counters.
+
+    The latency ring is lock-guarded: the worker appends while the /stats
+    HTTP thread computes percentiles, and iterating a deque that a bounded
+    append mutates raises ``RuntimeError`` mid-iteration.
+    """
 
     requests: int = 0              # accepted (completed or failed)
     completed: int = 0
@@ -36,15 +41,20 @@ class TenantStats:
     batched_requests: int = 0      # served inside a fused multi-request batch
     _latencies: Deque[float] = field(
         default_factory=lambda: deque(maxlen=4096))
+    _lat_lock: threading.Lock = field(default_factory=threading.Lock,
+                                      repr=False)
 
     def record_latency(self, seconds: float) -> None:
-        self._latencies.append(float(seconds))
+        with self._lat_lock:
+            self._latencies.append(float(seconds))
 
     def to_dict(self) -> dict:
         d = {"requests": self.requests, "completed": self.completed,
              "rejected_budget": self.rejected_budget, "failed": self.failed,
              "batched_requests": self.batched_requests}
-        d.update(_percentiles(self._latencies))
+        with self._lat_lock:
+            samples = list(self._latencies)
+        d.update(_percentiles(samples))
         return d
 
 

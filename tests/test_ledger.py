@@ -16,7 +16,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.accountant import BudgetExhausted
-from repro.serve.ledger import BudgetLedger, LedgerCorrupt, UnknownTenant
+from repro.serve.ledger import (BudgetLedger, LedgerCorrupt, LedgerFailed,
+                                UnknownTenant)
 
 
 def _path(tmp_path, name="ledger.jsonl"):
@@ -145,6 +146,73 @@ def test_reregister_keeps_spend(tmp_path):
     assert led.remaining("t") == 0.0
     with pytest.raises(BudgetExhausted):
         led.charge("t", 0.1)
+    led.close()
+
+
+class _FlakyFH:
+    """Wraps the ledger's raw journal handle; fails the next write partway
+    through (half the bytes land, then OSError — the ENOSPC shape)."""
+
+    def __init__(self, fh):
+        self._fh = fh
+        self.fail_next = False
+
+    def write(self, data):
+        if self.fail_next:
+            self.fail_next = False
+            self._fh.write(data[: len(data) // 2])
+            raise OSError(28, "No space left on device")
+        return self._fh.write(data)
+
+    def __getattr__(self, name):
+        return getattr(self._fh, name)
+
+
+def test_failed_append_truncates_partial_record(tmp_path):
+    """A mid-record write failure rolls the file back to the pre-write
+    length: no partial line is left to become non-trailing corruption, the
+    in-memory budget never advanced, and both retry and replay work."""
+    p = _path(tmp_path)
+    led = BudgetLedger(p)
+    led.register("t", pcost=4.0)
+    led.charge("t", 1.0)
+    flaky = _FlakyFH(led._fh)
+    led._fh = flaky
+    flaky.fail_next = True
+    with pytest.raises(OSError):
+        led.charge("t", 1.0)
+    assert led.spent("t") == pytest.approx(1.0)   # memory did not advance
+    # the journal holds only complete lines — a restart replays cleanly
+    # (before the truncate fix this was the LedgerCorrupt availability loss)
+    with open(p) as fh:
+        recs = [json.loads(ln) for ln in fh if ln.strip()]
+    assert sum(1 for r in recs if r["op"] == "charge") == 1
+    led.charge("t", 1.0)                          # handle still usable
+    assert led.spent("t") == pytest.approx(2.0)
+    led.close()
+    led2 = BudgetLedger(p)
+    assert led2.spent("t") == pytest.approx(2.0)
+    led2.close()
+
+
+def test_unrollable_append_failure_marks_ledger_failed(tmp_path, monkeypatch):
+    """If the rollback truncate ALSO fails, the on-disk tail is unknown:
+    the ledger refuses every further charge instead of appending after a
+    possible partial record."""
+    led = BudgetLedger(_path(tmp_path))
+    led.register("t", pcost=4.0)
+    flaky = _FlakyFH(led._fh)
+    led._fh = flaky
+    flaky.fail_next = True
+    monkeypatch.setattr(os, "ftruncate",
+                        lambda fd, n: (_ for _ in ()).throw(OSError(5, "io")))
+    with pytest.raises(OSError):
+        led.charge("t", 1.0)
+    monkeypatch.undo()
+    assert led.spent("t") == 0.0
+    with pytest.raises(LedgerFailed):
+        led.charge("t", 1.0)
+    assert led.spent("t") == 0.0                  # still nothing applied
     led.close()
 
 

@@ -189,6 +189,115 @@ def test_budget_is_per_tenant(tmp_path):
         srv.ledger.close()
 
 
+def test_malformed_marginals_rejected_before_charge(tmp_path):
+    """Marginals with missing cliques or wrong cell counts fail in phase 1,
+    BEFORE the ledger is charged — and the worker survives to serve the next
+    (valid) request."""
+    plans, margs = _tenant_setup(1)
+    srv = _server(tmp_path, plans)
+    try:
+        missing = {c: v for c, v in margs[0].items() if len(c) != 2}
+        with pytest.raises(ValueError, match="missing clique"):
+            srv.request_sync(ReleaseRequest(tenant="t0", marginals=missing))
+        bad_shape = dict(margs[0])
+        some_pair = next(c for c in plans[0].cliques if len(c) == 2)
+        bad_shape[some_pair] = np.zeros(3)
+        with pytest.raises(ValueError, match="cells, want"):
+            srv.request_sync(ReleaseRequest(tenant="t0",
+                                            marginals=bad_shape))
+        # neither malformed request burned any budget
+        assert srv.ledger.spent("t0") == 0.0
+        # worker alive and still serving: a valid request goes through
+        r = srv.request_sync(ReleaseRequest(tenant="t0", marginals=margs[0]))
+        assert r.tables is not None
+        assert srv.ledger.spent("t0") == pytest.approx(r.pcost_charged)
+        st = srv.stats_dict()
+        assert st["tenants"]["t0"]["failed"] == 2
+        assert st["tenants"]["t0"]["completed"] == 1
+    finally:
+        srv.stop()
+        srv.ledger.close()
+
+
+def test_worker_survives_fused_path_failure(tmp_path, monkeypatch):
+    """An unexpected exception inside the fused measure_multi path must not
+    kill the worker: charged requests fall back to the solo path and still
+    resolve (bit-identical, since both paths draw the same noise)."""
+    import repro.serve.server as server_mod
+
+    def boom(items, use_kernel=False, dtype=None):
+        raise RuntimeError("fused path exploded")
+
+    plans, margs = _tenant_setup(2)
+    srv = _server(tmp_path, plans, max_batch=8)
+    try:
+        monkeypatch.setattr(server_mod, "measure_multi", boom)
+        srv.pause()
+        futs = [srv.submit(ReleaseRequest(tenant=f"t{i}", marginals=margs[i],
+                                          seed=90 + i))
+                for i in range(2)]
+        srv.resume()
+        res = [f.result(120) for f in futs]
+        assert not any(r.batched for r in res)     # solo fallback
+        assert all(r.tables is not None for r in res)
+        # worker alive; fused path restored serves the next batch normally
+        monkeypatch.undo()
+        r = srv.request_sync(ReleaseRequest(tenant="t0", marginals=margs[0],
+                                            seed=90))
+        for c in r.tables:
+            assert np.array_equal(r.tables[c], res[0].tables[c])
+    finally:
+        srv.stop()
+        srv.ledger.close()
+
+
+def test_submit_after_stop_raises(tmp_path):
+    plans, margs = _tenant_setup(1)
+    srv = _server(tmp_path, plans)
+    try:
+        srv.request_sync(ReleaseRequest(tenant="t0", marginals=margs[0]))
+    finally:
+        srv.stop()
+    with pytest.raises(RuntimeError, match="not running"):
+        srv.submit(ReleaseRequest(tenant="t0", marginals=margs[0]))
+    srv.ledger.close()
+
+
+def test_register_tenant_mid_traffic(tmp_path):
+    """Registering tenants while the worker serves traffic must not corrupt
+    the shared engine pool or the session map (lock-guarded)."""
+    plans, margs = _tenant_setup(4)
+    srv = _server(tmp_path, plans[:1])
+    errors = []
+
+    def hammer():
+        try:
+            for s in range(10):
+                srv.request_sync(ReleaseRequest(tenant="t0",
+                                                marginals=margs[0], seed=s))
+        except Exception as exc:       # noqa: BLE001 — surfaced below
+            errors.append(exc)
+
+    t = None
+    try:
+        import threading
+        t = threading.Thread(target=hammer)
+        t.start()
+        for i in range(1, 4):
+            srv.register_tenant(f"t{i}", plans[i], rho=100.0)
+            srv.request_sync(ReleaseRequest(tenant=f"t{i}",
+                                            marginals=margs[i]))
+        t.join(120)
+        assert not t.is_alive() and not errors
+        assert set(srv.tenants()) == {"t0", "t1", "t2", "t3"}
+        assert srv.stats_dict()["tenants"]["t0"]["completed"] == 10
+    finally:
+        if t is not None and t.is_alive():
+            t.join(1)
+        srv.stop()
+        srv.ledger.close()
+
+
 def test_unknown_tenant_and_bad_requests(tmp_path):
     plans, margs = _tenant_setup(1)
     srv = _server(tmp_path, plans)
