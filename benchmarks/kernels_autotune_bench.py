@@ -1,0 +1,119 @@
+"""Autotuned vs fixed-default fused-chain launch configs (docs/DESIGN.md §14).
+
+The CI-gated rows: the fused measurement chains of the paper's Synth-10^20
+all-≤3-way workload (one ⊗ᵢSub_{n_i} chain per signature group at its
+serving batch — 2·g stacked [v; z] lanes), run with the historical fixed
+``block_l=128`` default and with the autotuner's per-signature configs.  On
+the CPU interpret backend the Pallas kernel body executes in Python once per
+grid step, so the tuner's grid-step minimization (the 3-way group's 2·1140 =
+2280 lanes drop from 18 grid steps to 1) is directly visible as wall-clock.
+The gate asserts ≥1.15× on the chain measure and fp32 BIT-exactness between
+the two configs (row independence: block_l/padding cannot change per-row
+results).  The end-to-end ``measure()`` phase — which adds the
+config-invariant marginal stacking + noise draws — is emitted as a secondary
+row.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import measure
+from repro.core.mechanism import signature_groups
+from repro.core.residual import sub_matrix
+from repro.kernels.autotune import registry_snapshot, reset_registry, tune_chain
+from repro.kernels.kron_matvec.fused import fused_chain_matvec
+from .common import emit, timeit
+from .kernels_bench import _measurement_workload
+
+
+def _with_mode(mode: str, fn):
+    prev = os.environ.get("REPRO_KERNEL_AUTOTUNE")
+    os.environ["REPRO_KERNEL_AUTOTUNE"] = mode
+    try:
+        return fn()
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_KERNEL_AUTOTUNE", None)
+        else:
+            os.environ["REPRO_KERNEL_AUTOTUNE"] = prev
+
+
+def run(fast: bool = True):
+    d = 20
+    plan, margs = _measurement_workload(d)
+    key = jax.random.PRNGKey(0)
+    tag = f"synth10^{d}_le3way"
+    rng = np.random.default_rng(0)
+
+    # One measurement chain per signature group, at the serving batch the
+    # engine registers (2·g stacked [v; z] lanes — docs/DESIGN.md §4).
+    chains = []
+    for dims, cliques in signature_groups(plan.domain, plan.cliques).items():
+        if not dims:
+            continue
+        facs = [sub_matrix(n) for n in dims]
+        b = 2 * len(cliques)
+        x = jnp.asarray(rng.standard_normal((b, int(np.prod(dims)))),
+                        jnp.float32)
+        chains.append((facs, dims, b, x))
+
+    cfgs = [tune_chain(facs, dims, batch=b, persist=False)
+            for facs, dims, b, _x in chains]
+
+    def run_default():
+        # mode is pinned to "off" around every call, so the unparametrized
+        # call takes the historical fixed block_l=128 plan, not the registry.
+        return [np.asarray(fused_chain_matvec(facs, x, dims))
+                for facs, dims, _b, x in chains]
+
+    def run_tuned():
+        return [np.asarray(fused_chain_matvec(
+            facs, x, dims, block_l=c.block_l, vmem_budget=c.vmem_budget))
+            for (facs, dims, _b, x), c in zip(chains, cfgs)]
+
+    y_def = _with_mode("off", run_default)    # warm jit/pallas caches
+    y_tun = run_tuned()
+    bit_exact = all(np.array_equal(a, b) for a, b in zip(y_def, y_tun))
+    t_def = _with_mode("off", lambda: timeit(run_default, repeats=3))
+    t_tun = timeit(run_tuned, repeats=3)
+
+    def_steps = sum(-(-b // min(128, -(-b // 8) * 8)) for _f, _d, b, _x in chains)
+    blocks = sorted({c.block_l for c in cfgs})
+    steps = sorted({c.grid_steps for c in cfgs})
+    intensity = round(float(np.mean([c.intensity for c in cfgs])), 3)
+    emit(f"autotune/chains_default/{tag}", t_def,
+         f"block_l=128 default, {def_steps} grid steps total",
+         grid_steps_total=def_steps)
+    emit(f"autotune/chains_tuned/{tag}", t_tun,
+         f"tuned block_l={blocks} grid_steps={steps}, "
+         f"{'bit-exact' if bit_exact else 'MISMATCH'} vs default",
+         tuned_block_l=blocks, tuned_grid_steps=steps,
+         predicted_intensity=intensity,
+         speedup_autotuned_vs_default=round(t_def / t_tun, 2),
+         bit_exact_fp32=bool(bit_exact))
+
+    # Secondary: the full measure() phase end-to-end (adds config-invariant
+    # marginal stacking + noise draws, so the ratio is diluted).
+    def measure_fused():
+        return measure(plan, margs, key, use_kernel=True, batched=True)
+
+    meas_def = _with_mode("off", measure_fused)
+    t_mdef = _with_mode("off", lambda: timeit(measure_fused, repeats=3))
+    reset_registry()
+    meas_tun = _with_mode("model", measure_fused)
+    t_mtun = _with_mode("model", lambda: timeit(measure_fused, repeats=3))
+    e2e_exact = all(np.array_equal(meas_def[c].omega, meas_tun[c].omega)
+                    for c in plan.cliques)
+    snap = registry_snapshot()
+    emit(f"autotune/measure_e2e_tuned/{tag}", t_mtun,
+         f"vs {t_mdef / 1e3:.0f}ms default, "
+         f"{'bit-exact' if e2e_exact else 'MISMATCH'}, "
+         f"{len(snap['entries'])} registry entries",
+         speedup_e2e=round(t_mdef / t_mtun, 2),
+         bit_exact_e2e=bool(e2e_exact),
+         registry_entries=len(snap["entries"]))

@@ -26,11 +26,12 @@ def main() -> None:
     from . import (table2_3_marginals_scaling, table4_5_accuracy,
                    table6_9_rplus, table10_14_crossover, fig1_3_fairness,
                    discrete_overhead, discrete_bench, kernels_bench,
-                   planner_bench, release_bench, roofline_bench, serve_bench)
+                   kernels_autotune_bench, planner_bench, release_bench,
+                   roofline_bench, serve_bench)
     modules = [table2_3_marginals_scaling, table4_5_accuracy, table6_9_rplus,
                table10_14_crossover, fig1_3_fairness, discrete_overhead,
-               discrete_bench, kernels_bench, planner_bench, release_bench,
-               roofline_bench, serve_bench]
+               discrete_bench, kernels_bench, kernels_autotune_bench,
+               planner_bench, release_bench, roofline_bench, serve_bench]
     print("name,us_per_call,derived")
     failed = 0
     for mod in modules:

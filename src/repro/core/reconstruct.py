@@ -124,7 +124,10 @@ def reconstruct_marginal_fast(plan: Plan, measurements: Mapping[Clique, Measurem
     factors = u_chain_factors(plan.domain, clique)
     if use_kernel:
         from repro.kernels.kron_matvec.fused import fused_chain_matvec
-        return np.asarray(fused_chain_matvec(factors, t.reshape(-1), sizes))
+        # Reconstruction carries no noise lanes: a tuned narrow compute dtype
+        # (fp32 accumulation) may serve it (docs/DESIGN.md §14).
+        return np.asarray(fused_chain_matvec(factors, t.reshape(-1), sizes,
+                                             allow_narrow=True))
     matvec = kron_matvec_np if xp is np else kron_matvec
     return matvec(factors, t.reshape(-1), sizes)
 
@@ -167,7 +170,8 @@ def reconstruct_all_batched(plan: Plan, measurements: Mapping[Clique, Measuremen
         factors = u_chain_factors(plan.domain, group[0])
         if use_kernel:
             from repro.kernels.kron_matvec.fused import fused_chain_matvec
-            y = np.asarray(fused_chain_matvec(factors, x, sizes))
+            y = np.asarray(fused_chain_matvec(factors, x, sizes,
+                                              allow_narrow=True))
         else:
             y = np.asarray(kron_matvec_batched(factors, x, sizes))
         for i, c in enumerate(group):

@@ -136,10 +136,9 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
             self._warmup()
 
     def _warmup(self) -> None:
-        for (dims, _sig, _bp), (cp, factors, batch, _epi) in \
-                self._chain_plans.items():
+        for key, (cp, factors, batch, _epi) in self._chain_plans.items():
             x = jnp.zeros((batch, cp.n_in), jnp.float32)
-            fused_chain_matvec(factors, x, dims).block_until_ready()
+            fused_chain_matvec(factors, x, key[0]).block_until_ready()
             self.stats.compile_warmups += 1
 
     # ------------------------------------------------------------ transforms

@@ -47,6 +47,8 @@ class EngineStats:
     fused_chains: int = 0          # chains that fit the fused VMEM budget
     fallback_chains: int = 0       # chains planned onto the per-axis path
     compile_warmups: int = 0
+    tuned_chains: int = 0          # chains whose launch config came from the
+    #                                autotuner (docs/DESIGN.md §14)
     # DiscreteEngine exactness-boundary counters (docs/DESIGN.md §10):
     device_h_groups: int = 0       # H groups served by the device chain + rint
     exact_h_groups: int = 0        # H groups on the exact int64/big-int path
@@ -68,29 +70,72 @@ class ChainRegistry:
     agreement.  Subclasses provide ``self.stats`` (EngineStats) and their own
     warmup loops over ``self._chain_plans``, whose values are
     ``(ChainPlan, factors, batch, epilogue)`` tuples.
+
+    Registration is where the autotuner hooks in (docs/DESIGN.md §14): when
+    ``REPRO_KERNEL_AUTOTUNE`` is not ``off``, every chain group is tuned up
+    front — in ``measure`` mode this times real kernels, safely outside any
+    serving request — and the plan row reflects the tuned launch config the
+    serving path will resolve.  ``role`` tags the chain's serving duty:
+    ``"measure"`` chains carry Gaussian noise lanes and are always planned at
+    float32; ``"reconstruct"`` chains may adopt a tuned narrow compute dtype
+    (fp32 accumulation) when one is enabled.
     """
 
     _chain_plans: Dict[tuple, tuple]
+    _chain_tune: Dict[tuple, object]
+    _chain_roles: Dict[tuple, str]
 
     def _register_chain(self, factors: List, dims: Tuple[int, ...],
-                        batch: int, epilogue: Optional[tuple] = None) -> None:
-        cp = plan_chain(factors, dims, batch=batch, epilogue=epilogue)
+                        batch: int, epilogue: Optional[tuple] = None,
+                        role: str = "measure") -> None:
+        from repro.kernels.autotune import autotune_mode, tune_chain
+        cfg = None
+        if autotune_mode() != "off":
+            cfg = tune_chain(factors, dims, batch=batch, epilogue=epilogue)
+            dt = cfg.compute_dtype if role == "reconstruct" else "float32"
+            cp = plan_chain(factors, dims, batch=batch, block_l=cfg.block_l,
+                            vmem_budget=cfg.vmem_budget, epilogue=epilogue,
+                            compute_dtype=dt)
+            fused = cfg.fused and cp.fused_ok
+        else:
+            cp = plan_chain(factors, dims, batch=batch, epilogue=epilogue)
+            fused = cp.fused_ok
         key = (tuple(dims), cp.signature, pad_to(batch, cp.block_l))
         if key not in self._chain_plans:
             self._chain_plans[key] = (cp, factors, batch, epilogue)
-            if cp.fused_ok:
+            if not hasattr(self, "_chain_tune"):
+                self._chain_tune = {}
+                self._chain_roles = {}
+            self._chain_tune[key] = cfg
+            self._chain_roles[key] = role
+            if fused:
                 self.stats.fused_chains += 1
             else:
                 self.stats.fallback_chains += 1
+            if cfg is not None:
+                self.stats.tuned_chains += 1
+
+    def _chain_allow_narrow(self, key: tuple) -> bool:
+        """Reconstruct-role chains may serve at a tuned narrow dtype."""
+        return getattr(self, "_chain_roles", {}).get(key) == "reconstruct"
 
     def chain_plans(self) -> List[dict]:
         """Layout report: one row per compiled chain (for ops/debugging)."""
         rows = []
-        for (dims, sig, b_p), (cp, _f, batch, _e) in self._chain_plans.items():
+        tune = getattr(self, "_chain_tune", {})
+        for key, (cp, _f, batch, _e) in self._chain_plans.items():
+            (dims, sig, b_p) = key
+            cfg = tune.get(key)
             rows.append(dict(dims=dims, batch=batch, batch_padded=b_p,
                              w_in=cp.w_in, w_out=cp.w_out, block_l=cp.block_l,
-                             vmem_bytes=cp.vmem_bytes, fused=cp.fused_ok,
-                             epilogue=sig[-1]))
+                             vmem_bytes=cp.vmem_bytes,
+                             fused=(cfg.fused and cp.fused_ok) if cfg
+                             else cp.fused_ok,
+                             epilogue=sig[3],
+                             compute_dtype=cp.compute_dtype,
+                             tuned=cfg is not None,
+                             tune_source=cfg.source if cfg else "default",
+                             intensity=cfg.intensity if cfg else None))
         return rows
 
 
@@ -199,22 +244,24 @@ class MarginalEngine(ReleaseServing, ChainRegistry):
         for dims, cliques in self._measure_groups.items():
             if dims:
                 self._register_chain([sub_matrix(n) for n in dims], dims,
-                                     2 * len(cliques))
+                                     2 * len(cliques), role="measure")
         for dims, cliques in self._reconstruct_groups.items():
             if dims:
                 self._register_chain(
                     u_chain_factors(plan.domain, cliques[0]), dims,
-                    len(cliques))
+                    len(cliques), role="reconstruct")
         if precompile and self.use_kernel:
             self._warmup()
 
     def _warmup(self) -> None:
         """Run every planned chain once on zeros — fills the pallas/jit cache
         for the exact batch paddings the serving path will request."""
-        for (dims, _sig, _bp), (cp, factors, batch, _epi) in \
-                self._chain_plans.items():
+        for key, (cp, factors, batch, _epi) in self._chain_plans.items():
+            dims = key[0]
             x = jnp.zeros((batch, cp.n_in), jnp.float32)
-            fused_chain_matvec(factors, x, dims).block_until_ready()
+            fused_chain_matvec(
+                factors, x, dims,
+                allow_narrow=self._chain_allow_narrow(key)).block_until_ready()
             self.stats.compile_warmups += 1
 
     # ------------------------------------------------------------------ serve

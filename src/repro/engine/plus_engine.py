@@ -124,9 +124,11 @@ class PlusEngine(ReleaseServing, ChainRegistry):
             spec = self._measure_specs[tok]
             dims, zdims, stage_a, stage_b = spec["split"]
             if any(f is not None for f in stage_a):
-                self._register_chain(stage_a, dims, len(cliques))
+                self._register_chain(stage_a, dims, len(cliques),
+                                     role="measure")
             if any(f is not None for f in stage_b):
-                self._register_chain(stage_b, zdims, 2 * len(cliques))
+                self._register_chain(stage_b, zdims, 2 * len(cliques),
+                                     role="measure")
         if precompile:
             self._warmup()
 
@@ -139,7 +141,8 @@ class PlusEngine(ReleaseServing, ChainRegistry):
                 if tok:
                     spec = self._reconstruct_specs[tok]
                     self._register_chain(spec["factors"], spec["in_dims"],
-                                         len(cliques), spec["epilogue"])
+                                         len(cliques), spec["epilogue"],
+                                         role="reconstruct")
         return self._reconstruct_specs
 
     # ------------------------------------------------------------ group prep
@@ -224,11 +227,13 @@ class PlusEngine(ReleaseServing, ChainRegistry):
         are jit/pallas cache hits at the exact shapes traffic will use."""
         self._ensure_reconstruct_state()
         if self.use_kernel:
-            for (dims, _sig, _bp), (cp, factors, batch, epi) in \
-                    self._chain_plans.items():
+            for key, (cp, factors, batch, epi) in self._chain_plans.items():
+                dims = key[0]
                 x = jnp.zeros((batch, cp.n_in), jnp.float32)
-                fused_chain_matvec(factors, x, dims,
-                                   epilogue=epi).block_until_ready()
+                fused_chain_matvec(
+                    factors, x, dims, epilogue=epi,
+                    allow_narrow=self._chain_allow_narrow(key)
+                ).block_until_ready()
                 self.stats.compile_warmups += 1
         for tok, cliques in self._measure_groups.items():
             if not tok:
@@ -382,7 +387,8 @@ class PlusEngine(ReleaseServing, ChainRegistry):
             x = self._embed_group(measurements, group, s["in_dims"])
             if self.use_kernel:
                 y = fused_chain_matvec(s["factors"], jnp.asarray(x),
-                                       s["in_dims"], epilogue=s["epilogue"])
+                                       s["in_dims"], epilogue=s["epilogue"],
+                                       allow_narrow=True)
                 y = s["expand"](y.reshape((len(group),)
                                           + tuple(s["chain_out"])))
             else:

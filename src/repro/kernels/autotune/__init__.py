@@ -1,0 +1,15 @@
+"""Launch-config autotuner for the fused Kron-chain kernel.
+
+See docs/TUNING.md for the env knobs (``REPRO_KERNEL_AUTOTUNE``,
+``REPRO_AUTOTUNE_CACHE``, ``REPRO_KERNEL_COMPUTE_DTYPES``) and
+docs/DESIGN.md §14 for the cost model and resolution rules.
+"""
+from .cache import CACHE_VERSION, TuningCache, default_cache_dir
+from .tuner import (TunedConfig, autotune_mode, chain_key, pretune,
+                    registry_snapshot, reset_registry, resolve_config,
+                    tune_chain)
+
+__all__ = ["CACHE_VERSION", "TuningCache", "default_cache_dir",
+           "TunedConfig", "autotune_mode", "chain_key", "pretune",
+           "registry_snapshot", "reset_registry", "resolve_config",
+           "tune_chain"]

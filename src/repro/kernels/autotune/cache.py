@@ -1,0 +1,87 @@
+"""On-disk persistence for tuned kernel launch configs (docs/TUNING.md).
+
+One small JSON file per device kind, keyed by the chain signature string the
+tuner builds (``tuner.chain_key``).  The file carries its schema version and
+the device kind it was tuned on; a mismatch on either invalidates the whole
+file (configs tuned for one device are meaningless on another, and schema
+bumps must not resurrect stale entries).  Writes are atomic (tmp + rename)
+so concurrent serving processes never observe a torn file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+CACHE_VERSION = 1
+
+
+def default_cache_dir() -> str:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE", "")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune")
+
+
+def _slug(device_kind: str) -> str:
+    return "".join(c if c.isalnum() else "_" for c in device_kind.lower())
+
+
+class TuningCache:
+    """Load/store tuned configs for one device kind.
+
+    ``get``/``put`` operate on plain dicts (the tuner owns the TunedConfig
+    dataclass); the cache only enforces the version/device envelope.
+    """
+
+    def __init__(self, device_kind: str, path: Optional[str] = None):
+        self.device_kind = device_kind
+        self.path = path or os.path.join(default_cache_dir(),
+                                         f"{_slug(device_kind)}.json")
+        self._entries: Optional[Dict[str, dict]] = None
+
+    # ------------------------------------------------------------------ load
+    def load(self) -> Dict[str, dict]:
+        if self._entries is not None:
+            return self._entries
+        self._entries = {}
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+            if (blob.get("version") == CACHE_VERSION
+                    and blob.get("device_kind") == self.device_kind
+                    and isinstance(blob.get("entries"), dict)):
+                self._entries = dict(blob["entries"])
+        except (OSError, ValueError):
+            pass                       # missing/corrupt file == empty cache
+        return self._entries
+
+    def get(self, key: str) -> Optional[dict]:
+        return self.load().get(key)
+
+    # ----------------------------------------------------------------- store
+    def put(self, key: str, config: dict) -> None:
+        entries = self.load()
+        entries[key] = config
+        self._write(entries)
+
+    def _write(self, entries: Dict[str, dict]) -> None:
+        blob = {"version": CACHE_VERSION, "device_kind": self.device_kind,
+                "entries": entries}
+        d = os.path.dirname(self.path)
+        try:
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass                       # read-only FS: keep the in-memory view
+
+    def clear(self) -> None:
+        self._entries = {}
+        try:
+            os.unlink(self.path)
+        except OSError:
+            pass

@@ -15,6 +15,17 @@ slice for every factor of ``⊗_i S_i``.  This module plans the layout of the
     the pad/slice/pallas_call counts are instrumented in stats.py so tests
     can assert the contract.
 
+Launch configs are no longer one-size-fits-all: ``plan_chain`` is
+dtype-aware (compute dtype ∈ {float32, bfloat16, float16} with fp32
+accumulation, itemsize-correct VMEM accounting, device-derived budgets with
+the historical 4 MiB as the CPU/interpret fallback), and when the
+per-signature autotuner is enabled (``REPRO_KERNEL_AUTOTUNE``, docs/TUNING.md)
+``fused_chain_matvec`` resolves the tuned ``(block_l, vmem_budget,
+compute_dtype, fused)`` config for the chain signature instead of the fixed
+default (docs/DESIGN.md §14).  Explicitly passed config kwargs always win and
+bypass the tuner (that is also how the tuner's own measured refinement calls
+avoid recursion).
+
 Chains whose working tile would overflow the VMEM budget fall back to the
 per-axis kernel (ops.py), which tiles R and is correct at any size — the
 fused path is the fast path, not the only path.
@@ -42,8 +53,25 @@ from .stats import CHAIN_STATS
 
 _LANE = 128          # minor-axis (lane) padding quantum
 _SUB = 8             # sublane padding quantum (float32)
-_MAX_BLOCK_L = 128   # batch rows per grid step
-_VMEM_BUDGET = 4 * 1024 * 1024   # bytes of working tile the fused kernel may use
+_MAX_BLOCK_L = 128   # batch rows per grid step (untuned default)
+_VMEM_BUDGET = 4 * 1024 * 1024   # untuned CPU/interpret fallback budget
+
+# Sublane quantum per compute dtype (pallas guide: min tile second-to-last
+# dim is 8 for fp32, 16 for bf16/fp16).
+_SUBLANE = {"float32": 8, "bfloat16": 16, "float16": 16}
+_ACC_BYTES = 4       # accumulation / output dtype is always float32
+
+
+def _sublane(compute_dtype: str) -> int:
+    return _SUBLANE.get(str(compute_dtype), _SUB)
+
+
+def default_vmem_budget() -> int:
+    """Device-derived untuned budget: 4 MiB on CPU/interpret (the historical
+    constant), the device table's conservative budget on real accelerators."""
+    from repro.roofline.cost_model import detect_device
+    dev = detect_device()
+    return _VMEM_BUDGET if dev.interpret else dev.default_vmem_budget
 
 
 @dataclass(frozen=True)
@@ -51,8 +79,8 @@ class ChainPlan:
     """Static layout plan for one fused chain (docs/DESIGN.md §3.3).
 
     The plan is the jit-cache key: chains with the same signature — per-axis
-    (m_i, n_i) shapes, batch padding and tile widths — share one compiled
-    kernel regardless of the factor *values*.
+    (m_i, n_i) shapes, batch padding and tile widths, compute dtype — share
+    one compiled kernel regardless of the factor *values*.
     """
 
     in_dims: Tuple[int, ...]                       # per-axis input sizes n_i
@@ -66,22 +94,39 @@ class ChainPlan:
     vmem_bytes: int                                # working-tile footprint
     fused_ok: bool                                 # fits the VMEM budget?
     epilogue: Tuple[Optional[str], ...] = ()       # per-axis implicit-W op
+    compute_dtype: str = "float32"                 # operand dtype (fp32 accum)
 
     @property
     def signature(self) -> tuple:
-        return (self.in_dims, self.fshapes, self.block_l, self.epilogue)
+        return (self.in_dims, self.fshapes, self.block_l, self.epilogue,
+                self.compute_dtype)
 
 
 def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
                block_l: Optional[int] = None,
-               vmem_budget: int = _VMEM_BUDGET,
-               epilogue: Optional[Sequence[Optional[str]]] = None) -> ChainPlan:
+               vmem_budget: Optional[int] = None,
+               epilogue: Optional[Sequence[Optional[str]]] = None,
+               compute_dtype: str = "float32") -> ChainPlan:
     """Plan the fused layout of ``(⊗_i factors[i])`` applied to a (batch, N) stack.
 
     ``epilogue[i]`` is an optional shape-preserving implicit-W op applied to
     axis i after the chain: ``'cumsum'`` (prefix-sum along the axis, the
     implicit form of the lower-triangular prefix matrix — docs/DESIGN.md §8).
+
+    ``compute_dtype`` narrows the *operands* (input tile + factors); every
+    contraction still accumulates in float32 (``preferred_element_type``) and
+    the output tile is float32.  VMEM accounting is itemsize-correct: the
+    input tile at the compute dtype's itemsize, output + intermediates at the
+    fp32 accumulator width, the tril epilogue operand at its own (compute)
+    dtype.  ``vmem_budget=None`` resolves to the device default — the
+    historical 4 MiB on CPU/interpret.
     """
+    compute_dtype = str(jnp.dtype(compute_dtype).name)
+    if compute_dtype not in _SUBLANE:
+        raise ValueError(f"unsupported compute dtype {compute_dtype!r}; "
+                         f"expected one of {sorted(_SUBLANE)}")
+    if vmem_budget is None:
+        vmem_budget = default_vmem_budget()
     dims = tuple(int(d) for d in dims)
     epilogue = tuple(epilogue) if epilogue is not None else (None,) * len(dims)
     if len(epilogue) != len(dims):
@@ -102,12 +147,16 @@ def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
             out_dims.append(int(s.shape[0]))
     n_in = math.prod(dims) if dims else 1
     n_out = math.prod(out_dims) if out_dims else 1
+    sub = _sublane(compute_dtype)
     if block_l is None:
-        block_l = min(_MAX_BLOCK_L, _pad_to(max(batch, 1), _SUB))
+        block_l = min(_MAX_BLOCK_L, _pad_to(max(batch, 1), sub))
+    block_l = _pad_to(int(block_l), sub)
     w_in = _pad_to(n_in, _LANE)
     w_out = _pad_to(n_out, _LANE)
-    # Peak per-step tensor while the chain runs in VMEM: input tile + output
-    # tile + the largest intermediate (applying factors left to right).
+    # Peak per-step tensor while the chain runs in VMEM: input tile at the
+    # compute itemsize + output tile and largest fp32 intermediate (dot
+    # outputs accumulate in fp32 before narrowing for the next factor).
+    isz = jnp.dtype(compute_dtype).itemsize
     sizes = [n_in]
     cur = list(dims)
     for axis, spec in enumerate(specs):
@@ -115,16 +164,20 @@ def plan_chain(factors: Sequence, dims: Sequence[int], batch: int = 1,
             continue
         cur[axis] = spec[0]
         sizes.append(math.prod(cur))
-    vmem = 4 * block_l * (w_in + w_out + max(sizes))
+    vmem = block_l * (isz * w_in + _ACC_BYTES * (w_out + max(sizes)))
+    # Factors ride along whole, at the compute dtype.
+    vmem += isz * sum(m * n for s in specs if s is not None for m, n in [s])
     # The in-kernel cumsum epilogue contracts with an iota-built (n, n)
-    # triangular operand; it lives in VMEM alongside the tile.
-    vmem += 4 * sum(out_dims[a] ** 2 for a, op in enumerate(epilogue)
-                    if op == "cumsum")
+    # triangular operand at its own (compute) dtype; it lives in VMEM
+    # alongside the tile.
+    vmem += isz * sum(out_dims[a] ** 2 for a, op in enumerate(epilogue)
+                      if op == "cumsum")
     return ChainPlan(dims, tuple(specs), tuple(out_dims), n_in, n_out,
-                     w_in, w_out, block_l, vmem, vmem <= vmem_budget, epilogue)
+                     w_in, w_out, block_l, vmem, vmem <= vmem_budget,
+                     epilogue, compute_dtype)
 
 
-def _tril_ones(n: int) -> jnp.ndarray:
+def _tril_ones(n: int, dtype=jnp.float32) -> jnp.ndarray:
     """(n, n) lower-triangular ones, built from iotas inside the kernel.
 
     ``y = x @ trilᵀ`` is the cumsum along the contracted axis — the implicit
@@ -133,22 +186,29 @@ def _tril_ones(n: int) -> jnp.ndarray:
     """
     r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
     c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
-    return (c <= r).astype(jnp.float32)
+    return (c <= r).astype(dtype)
 
 
 def _make_fused_kernel(plan: ChainPlan):
     """Kernel body: the whole chain on one VMEM-resident (block_l, W) tile."""
     dims, specs, epilogue = plan.in_dims, plan.fshapes, plan.epilogue
     n_in, n_out, w_out, bl = plan.n_in, plan.n_out, plan.w_out, plan.block_l
+    cd = jnp.dtype(plan.compute_dtype)
+    narrow = cd != jnp.float32
 
     def _contract(x, s, axis):
         # Contract axis ``axis+1`` with S by rotating it to the minor
         # position — the dot_general then maps onto the MXU with the
         # (block_l × leading-dims) batch as rows (docs/DESIGN.md §3.2).
+        # Operands are at the compute dtype; accumulation is fp32, and the
+        # result narrows back for the next factor (mixed-precision policy,
+        # docs/DESIGN.md §14).
         x = jnp.moveaxis(x, axis + 1, x.ndim - 1)
         x = jax.lax.dot_general(
             x, s, dimension_numbers=(((x.ndim - 1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
+        if narrow:
+            x = x.astype(cd)
         return jnp.moveaxis(x, x.ndim - 1, axis + 1)
 
     def kernel(*refs):
@@ -163,8 +223,8 @@ def _make_fused_kernel(plan: ChainPlan):
             x = _contract(x, s, axis)
         for axis, op in enumerate(epilogue):
             if op == "cumsum":
-                x = _contract(x, _tril_ones(x.shape[axis + 1]), axis)
-        y = x.reshape(bl, n_out)
+                x = _contract(x, _tril_ones(x.shape[axis + 1], cd), axis)
+        y = x.reshape(bl, n_out).astype(jnp.float32)
         o_ref[...] = jnp.zeros((bl, w_out), y.dtype).at[:, :n_out].set(
             y).astype(o_ref.dtype)
 
@@ -174,11 +234,11 @@ def _make_fused_kernel(plan: ChainPlan):
 @lru_cache(maxsize=None)
 def _build_fused_call(signature: tuple, b_p: int, interpret: bool):
     """Compile (and cache, keyed on the chain signature) the fused pallas_call."""
-    in_dims, fshapes, block_l, epilogue = signature
+    in_dims, fshapes, block_l, epilogue, compute_dtype = signature
     plan = plan_chain([np.zeros(s) if s else None for s in fshapes],
-                      in_dims, batch=b_p, block_l=block_l, epilogue=epilogue)
+                      in_dims, batch=b_p, block_l=block_l, epilogue=epilogue,
+                      compute_dtype=compute_dtype)
     kernel = _make_fused_kernel(plan)
-    n_factors = sum(1 for s in fshapes if s is not None)
     grid = (b_p // block_l,)
     in_specs = [pl.BlockSpec(s, lambda i: (0, 0))
                 for s in fshapes if s is not None]
@@ -233,16 +293,27 @@ def apply_epilogue(y, out_dims: Sequence[int],
 def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
                        interpret: Optional[bool] = None,
                        block_l: Optional[int] = None,
-                       vmem_budget: int = _VMEM_BUDGET,
-                       epilogue: Optional[Sequence[Optional[str]]] = None
-                       ) -> jnp.ndarray:
+                       vmem_budget: Optional[int] = None,
+                       epilogue: Optional[Sequence[Optional[str]]] = None,
+                       compute_dtype: Optional[str] = None,
+                       allow_narrow: bool = False) -> jnp.ndarray:
     """Apply ``⊗_i factors[i]`` to a stack ``x`` of shape (B, N) (or flat (N,)).
 
     One pad, one pallas_call, one slice per chain (stats.py instruments the
     contract).  Chains too large for VMEM fall back to the per-axis kernel.
     ``epilogue`` marks axes for in-kernel implicit-W ops (``'cumsum'``), see
     :func:`plan_chain`.  Returns shape (B, n_out) — or flat (n_out,) if the
-    input was flat.
+    input was flat; the output dtype is always float32.
+
+    Launch-config resolution (docs/DESIGN.md §14): if any of ``block_l`` /
+    ``vmem_budget`` / ``compute_dtype`` is passed explicitly, exactly those
+    values are used (unset ones take the untuned defaults) and the autotuner
+    is bypassed.  Otherwise, when ``REPRO_KERNEL_AUTOTUNE`` is not ``off``,
+    the tuned config for this chain signature is looked up (tuning it on the
+    fly with the analytic cost model on a first miss).  ``allow_narrow``
+    gates the mixed-precision policy: chains that carry Gaussian noise lanes
+    keep the default ``False`` so a tuned narrow compute dtype is clamped
+    back to float32 — noise stays fp32, only the data path may narrow.
     """
     interpret = _interpret_default() if interpret is None else interpret
     x = jnp.asarray(x, jnp.float32)
@@ -250,11 +321,26 @@ def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
     if flat_in:
         x = x[None, :]
     b = x.shape[0]
-    plan = plan_chain(factors, dims, batch=b, block_l=block_l,
-                      vmem_budget=vmem_budget, epilogue=epilogue)
+    explicit = (block_l is not None or vmem_budget is not None
+                or compute_dtype is not None)
+    s_facs = [_normalize_factor(f, n) for f, n in zip(factors, dims)]
+    force_fallback = False
+    if not explicit:
+        from repro.kernels.autotune import resolve_config
+        cfg = resolve_config(s_facs, dims, batch=b, epilogue=epilogue,
+                             interpret=interpret)
+        if cfg is not None:
+            block_l = cfg.block_l
+            vmem_budget = cfg.vmem_budget
+            compute_dtype = cfg.compute_dtype if allow_narrow else "float32"
+            force_fallback = not cfg.fused
+    if compute_dtype is None:
+        compute_dtype = "float32"
+    plan = plan_chain(s_facs, dims, batch=b, block_l=block_l,
+                      vmem_budget=vmem_budget, epilogue=epilogue,
+                      compute_dtype=compute_dtype)
     if x.shape[1] != plan.n_in:
         raise ValueError(f"x width {x.shape[1]} != prod(dims) {plan.n_in}")
-    s_facs = [_normalize_factor(f, n) for f, n in zip(factors, dims)]
     live = [s for s in s_facs if s is not None]
     has_epi = any(op is not None for op in plan.epilogue)
     if not live and not has_epi:
@@ -263,19 +349,22 @@ def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
         y = apply_epilogue(x, plan.out_dims, plan.epilogue)
         CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
         return y[0] if flat_in else y
-    if not plan.fused_ok:
+    if force_fallback or not plan.fused_ok:
         CHAIN_STATS.fallback_chains += 1
         y = _fallback_per_axis(s_facs, x, plan.in_dims, interpret)
         y = apply_epilogue(y, plan.out_dims, plan.epilogue)
         CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
         return y[0] if flat_in else y
 
+    cd = jnp.dtype(plan.compute_dtype)
     b_p = _pad_to(b, plan.block_l)
-    # ONE pad: batch to the sublane grid, flat width to the lane grid.
-    x_p = jnp.zeros((b_p, plan.w_in), jnp.float32).at[:b, :plan.n_in].set(x)
+    # ONE pad: batch to the sublane grid, flat width to the lane grid; the
+    # tile narrows to the compute dtype here so VMEM sees the planned bytes.
+    x_p = jnp.zeros((b_p, plan.w_in), cd).at[:b, :plan.n_in].set(
+        x.astype(cd))
     CHAIN_STATS.pads += 1
     call, _ = _build_fused_call(plan.signature, b_p, interpret)
-    out = call(*[jnp.asarray(s) for s in live], x_p)
+    out = call(*[jnp.asarray(s, cd) for s in live], x_p)
     CHAIN_STATS.pallas_calls += 1
     CHAIN_STATS.fused_chains += 1
     CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)

@@ -1,1 +1,7 @@
-from .analyze import analyze_all, analyze_cell, HW
+from .analyze import HW, analyze_all, analyze_cell, artifact_dir
+from .cost_model import (DEVICE_TABLE, ChainCost, CostModel, DeviceSpec,
+                         detect_device, device_spec)
+
+__all__ = ["HW", "analyze_all", "analyze_cell", "artifact_dir",
+           "DEVICE_TABLE", "ChainCost", "CostModel", "DeviceSpec",
+           "detect_device", "device_spec"]

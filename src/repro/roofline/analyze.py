@@ -1,10 +1,12 @@
 """Roofline analysis from dry-run artifacts (deliverable g).
 
-Three terms per (arch × shape) on the single-pod mesh, with TPU v5e constants:
+Three terms per (arch × shape) on the single-pod mesh, computed by the shared
+:class:`~repro.roofline.cost_model.CostModel` (docs/DESIGN.md §14) against
+the artifact mesh's device — TPU v5e for the committed dry runs:
 
-    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s)
-    memory     = HLO_bytes   / (chips × 819e9  B/s)
-    collective = coll_bytes  / (chips × 50e9   B/s per ICI link)
+    compute    = HLO_FLOPs   / (chips × peak FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM B/s)
+    collective = coll_bytes  / (chips × ICI B/s per link)
 
 cost_analysis() numbers from an SPMD executable are *per device*, so global
 quantities are per-device × chips (the two conventions cancel in the terms).
@@ -20,14 +22,41 @@ import os
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from .cost_model import DEVICE_TABLE, CostModel, DeviceSpec
+
+# The committed dry-run artifacts were produced on a v5e mesh; HW stays the
+# published back-compat view of those constants (bf16 peak / HBM / ICI).
+_ARTIFACT_DEVICE: DeviceSpec = DEVICE_TABLE["tpu v5 lite"]
 HW = {
-    "peak_flops": 197e12,      # bf16 / chip
-    "hbm_bw": 819e9,           # B/s / chip
-    "ici_bw": 50e9,            # B/s / link
+    "peak_flops": _ARTIFACT_DEVICE.peak_flops,
+    "hbm_bw": _ARTIFACT_DEVICE.hbm_bw,
+    "ici_bw": _ARTIFACT_DEVICE.ici_bw,
 }
 
-ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
-                            "artifacts", "dryrun")
+
+def artifact_dir() -> str:
+    """Resolve the dry-run artifact directory at call time.
+
+    The historical module-level ``os.path.dirname(__file__) + ../../..``
+    construction only worked from a source checkout — installed packages
+    live under site-packages, where three-parents-up is garbage.  Resolution
+    order: ``REPRO_ARTIFACT_DIR`` env override → ``artifacts/dryrun`` under
+    the current working directory → the source-checkout relative path (kept
+    last so editable installs still find committed artifacts).
+    """
+    env = os.environ.get("REPRO_ARTIFACT_DIR", "")
+    if env:
+        return env
+    cwd = os.path.join(os.getcwd(), "artifacts", "dryrun")
+    if os.path.isdir(cwd):
+        return cwd
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "..", "..", "..", "artifacts", "dryrun")
+
+
+# Back-compat module constant (benchmarks/roofline_bench.py imports it);
+# resolved through artifact_dir() so installed packages get a sane value.
+ARTIFACT_DIR = artifact_dir()
 
 
 @dataclass
@@ -63,7 +92,11 @@ class CellRoofline:
             mfu=self.mfu_bound, mem=self.memory_bytes_per_device / 2**30)
 
 
-def analyze_cell(rec: dict) -> CellRoofline:
+def analyze_cell(rec: dict, device: Optional[DeviceSpec] = None
+                 ) -> CellRoofline:
+    """Roofline terms for one dry-run record via the shared CostModel."""
+    device = _ARTIFACT_DEVICE if device is None else device
+    model = CostModel(device)
     cell = CellRoofline(rec["arch"], rec["shape"], rec["mesh"],
                         rec.get("chips", 256), rec["status"],
                         reason=rec.get("reason", rec.get("error", "")))
@@ -83,21 +116,21 @@ def analyze_cell(rec: dict) -> CellRoofline:
         flops_dev = float(ca.get("flops", 0.0))
         bytes_dev = float(ca.get("bytes accessed", 0.0))
         coll_dev = float(sum(rec.get("collective_bytes_per_device", {}).values()))
+        cell.coll_breakdown = rec.get("collective_bytes_per_device")
     cell.flops_global = flops_dev * chips
     cell.bytes_global = bytes_dev * chips
     cell.coll_bytes_global = coll_dev * chips
-    cell.coll_breakdown = rec.get("collective_bytes_per_device")
-    cell.t_compute = cell.flops_global / (chips * HW["peak_flops"])
-    cell.t_memory = cell.bytes_global / (chips * HW["hbm_bw"])
-    cell.t_collective = cell.coll_bytes_global / (chips * HW["ici_bw"])
+    terms = model.roofline_terms(cell.flops_global, cell.bytes_global,
+                                 cell.coll_bytes_global, chips)
+    cell.t_compute = terms["t_compute"]
+    cell.t_memory = terms["t_memory"]
+    cell.t_collective = terms["t_collective"]
+    cell.bottleneck = terms["bottleneck"]
     cell.model_flops = float(rec.get("model_flops", 0.0))
     cell.useful_ratio = (cell.model_flops / cell.flops_global
                          if cell.flops_global else 0.0)
-    terms = {"compute": cell.t_compute, "memory": cell.t_memory,
-             "collective": cell.t_collective}
-    cell.bottleneck = max(terms, key=terms.get)
-    t_dom = max(terms.values())
-    cell.mfu_bound = (cell.model_flops / (chips * HW["peak_flops"] * t_dom)
+    t_dom = terms["t_dominant"]
+    cell.mfu_bound = (cell.model_flops / (chips * device.peak_flops * t_dom)
                       if t_dom else 0.0)
     ma = rec.get("memory_analysis", {})
     cell.memory_bytes_per_device = int(
@@ -106,17 +139,18 @@ def analyze_cell(rec: dict) -> CellRoofline:
     return cell
 
 
-def load_records(artifact_dir: str = ARTIFACT_DIR, mesh: str = "single"
+def load_records(artifact_dir_: Optional[str] = None, mesh: str = "single"
                  ) -> List[dict]:
+    d = artifact_dir() if artifact_dir_ is None else artifact_dir_
     recs = []
-    for f in sorted(glob.glob(os.path.join(artifact_dir, f"*__{mesh}.json"))):
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
         recs.append(json.load(open(f)))
     return recs
 
 
-def analyze_all(artifact_dir: str = ARTIFACT_DIR, mesh: str = "single"
+def analyze_all(artifact_dir_: Optional[str] = None, mesh: str = "single"
                 ) -> List[CellRoofline]:
-    return [analyze_cell(r) for r in load_records(artifact_dir, mesh)]
+    return [analyze_cell(r) for r in load_records(artifact_dir_, mesh)]
 
 
 def markdown_table(cells: List[CellRoofline]) -> str:
@@ -132,7 +166,7 @@ def main():
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single")
-    ap.add_argument("--dir", default=ARTIFACT_DIR)
+    ap.add_argument("--dir", default=None)
     args = ap.parse_args()
     cells = analyze_all(args.dir, args.mesh)
     print(markdown_table(cells))

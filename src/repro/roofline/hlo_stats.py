@@ -134,7 +134,15 @@ def _operands(rest: str) -> List[str]:
             cur = []
             continue
         cur.append(ch)
-    return [o.split(" ")[-1] for o in out if o.strip().startswith("%")]
+    # Scheduled HLO prints operands with inline types ("f32[64,128]{1,0}
+    # %Arg_0.1"); older dumps print bare "%name".  The operand name is the
+    # last whitespace token either way.
+    names = []
+    for o in out:
+        tok = o.strip().split(" ")[-1]
+        if tok.startswith("%"):
+            names.append(tok)
+    return names
 
 
 class Computation:

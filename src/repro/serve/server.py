@@ -235,7 +235,14 @@ class ReleaseServer:
         return self.submit(request).result(timeout)
 
     def stats_dict(self) -> dict:
-        return self.stats.to_dict(cache=self.pool.cache, ledger=self.ledger)
+        d = self.stats.to_dict(cache=self.pool.cache, ledger=self.ledger)
+        # Kernel-tier observability (docs/DESIGN.md §14): the process-wide
+        # pad/call/slice counters and the autotuner decisions in effect.
+        from repro.kernels.autotune import registry_snapshot
+        from repro.kernels.kron_matvec.stats import chain_stats
+        d["kernels"] = chain_stats()
+        d["autotune"] = registry_snapshot()
+        return d
 
     # -------------------------------------------------------------- worker
     def _worker_loop(self) -> None:
