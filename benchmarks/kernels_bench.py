@@ -34,9 +34,9 @@ def _micro(fast: bool):
         facs = [sub_matrix(n) for n in dims]
         x = jnp.asarray(np.random.default_rng(0).standard_normal(
             int(np.prod(dims))), jnp.float32)
-        ref = jax.jit(lambda x: kron_matvec_ref(facs, x, dims))
+        ref = jax.jit(lambda x, facs=facs, dims=dims: kron_matvec_ref(facs, x, dims))
         ref(x).block_until_ready()
-        t = timeit(lambda: ref(x).block_until_ready(), repeats=5)
+        t = timeit(lambda ref=ref, x=x: ref(x).block_until_ready(), repeats=5)
         gflops = 2 * sum((n - 1) * np.prod(dims) / n for n in dims) / 1e9
         emit(f"kernel/kron_ref/dims={'x'.join(map(str, dims))}", t,
              f"~{gflops / (t / 1e6):.2f} GFLOP/s on CPU")

@@ -25,19 +25,22 @@ def run(fast: bool = True):
         wk = all_kway(dom, min(3, d), include_lower=True)
         cells = {c: float(dom.n_cells(c)) for c in wk.cliques}
 
-        t_sel = timeit(lambda: select_sum_of_variances(wk, 1.0, cells), repeats=3)
+        t_sel = timeit(lambda wk=wk, cells=cells: select_sum_of_variances(
+            wk, 1.0, cells), repeats=3)
         emit(f"table2/select_rmse/d={d}", t_sel, "paper Tbl2 col2")
-        t_mv = timeit(lambda: select_max_variance(
+        t_mv = timeit(lambda wk=wk, d=d: select_max_variance(
             wk, 1.0, iters=300 if d >= 50 else 2000), repeats=1)
         emit(f"table2/select_maxvar/d={d}", t_mv, "paper Tbl2 col3")
 
         plan = select_sum_of_variances(wk, 1.0, cells)
         margs = {c: np.zeros(dom.n_cells(c)) for c in plan.cliques}
-        t_meas = timeit(lambda: measure_np_batched(plan, margs, rng), repeats=1)
-        t_meas_loop = timeit(lambda: measure_np(plan, margs, rng), repeats=1)
+        t_meas = timeit(lambda plan=plan, margs=margs: measure_np_batched(
+            plan, margs, rng), repeats=1)
+        t_meas_loop = timeit(lambda plan=plan, margs=margs: measure_np(
+            plan, margs, rng), repeats=1)
         meas = measure_np_batched(plan, margs, rng)
-        t_rec = timeit(lambda: [reconstruct_marginal(plan, meas, c)
-                                for c in wk.cliques], repeats=1)
+        t_rec = timeit(lambda plan=plan, meas=meas, wk=wk: [
+            reconstruct_marginal(plan, meas, c) for c in wk.cliques], repeats=1)
         emit(f"table3/measure/d={d}", t_meas,
              f"Alg1 batched (per-clique loop: {t_meas_loop:.0f}us, "
              f"{t_meas_loop / max(t_meas, 1e-9):.1f}x slower)")

@@ -3,6 +3,8 @@ document attributes while DP-SGD training shares the same privacy budget.
 
 Run:  PYTHONPATH=src python examples/dp_corpus_stats.py
 """
+import contextlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -31,12 +33,10 @@ def main():
 
     acct = DPSGDAccountant(DPSGDConfig(noise_multiplier=1.0), budget)
     steps = 0
-    try:
+    with contextlib.suppress(ValueError):  # charge until the budget refuses
         while True:
             acct.charge_step()
             steps += 1
-    except ValueError:
-        pass
     print(f"remaining budget funds {steps} DP-SGD steps at sigma=1.0")
     print("final:", acct.report())
 

@@ -79,7 +79,7 @@ def main_serve():
 
     with ReleaseServer(ledger, max_batch=8) as server:
         plans = {}
-        for i, name in enumerate(tenants):
+        for name in tenants:
             plans[name] = select(wk, pcost_budget=1.0)
             server.register_tenant(name, plans[name], rho=0.5)
         print(f"registered {len(tenants)} tenants, ledger at {ledger_path}")

@@ -1,0 +1,31 @@
+"""repro-lint: AST/dataflow static analysis for the repo's load-bearing
+invariants (docs/ANALYSIS.md, docs/DESIGN.md §15).
+
+Three pass families, each proving a property the rest of the stack only
+defended by convention and after-the-fact regression tests:
+
+* **privacy-flow** (:mod:`repro.analysis.privacy`) — intraprocedural taint
+  analysis from raw-data sources through Gaussian-noise sanitizers to
+  release sinks, plus the charge-before-measure protocol check over the
+  serving tier (``PF*`` rules);
+* **kernel-invariant** (:mod:`repro.analysis.kernels`) — launch-config
+  literals checked against the :mod:`repro.roofline.cost_model` DeviceSpec
+  table, the noise-stays-fp32 ``allow_narrow`` policy, and host-effect
+  hygiene inside jitted/Pallas kernel bodies (``KN*`` rules);
+* **lock-discipline** (:mod:`repro.analysis.locks`) — ``# guarded-by:``
+  annotated fields may only be touched under their lock (``LK*`` rules).
+
+Drive it with ``python tools/repro_lint.py [--gate]`` or programmatically
+via :func:`analyze_paths` / :func:`analyze_source`.
+"""
+from .driver import (DEFAULT_ROOTS, analyze_file, analyze_paths,
+                     analyze_source, iter_py_files, main)
+from .findings import Baseline, Finding
+from .registry import (DEFAULT_PRIVACY, ALL_RULES, KernelLimits,
+                       PrivacyRegistry, kernel_limits)
+
+__all__ = ["DEFAULT_ROOTS", "analyze_file", "analyze_paths",
+           "analyze_source", "iter_py_files", "main",
+           "Baseline", "Finding",
+           "DEFAULT_PRIVACY", "ALL_RULES", "KernelLimits",
+           "PrivacyRegistry", "kernel_limits"]

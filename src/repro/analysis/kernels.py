@@ -1,0 +1,193 @@
+"""Kernel-invariant pass (KN rules).
+
+Checks launch-config literals at ``plan_chain`` / ``fused_chain_matvec`` /
+``tune_chain`` call sites against the live device limits (sublane quantum
+per compute dtype, lane width, the DeviceSpec VMEM table), plus two
+structural rules: no narrow compute dtype on a chain launched from a
+noise-drawing function (the ``allow_narrow`` contract — Gaussian noise must
+stay float32 end to end), and no host side effects (Python RNG, clock,
+I/O) inside jitted or Pallas kernel bodies, where they would either trace
+to a constant or silently desync across launches.
+
+Only *literal* arguments are judged.  A computed ``block_l`` is the
+autotuner's job at runtime; a literal one is a reviewable claim the
+analyzer can check at commit time.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .astutils import (ModuleInfo, call_name, const_int, const_str,
+                       dotted_name, enclosing_function, keyword_arg, qualname,
+                       walk_in_order)
+from .findings import Finding
+from .registry import KernelLimits, kernel_limits
+
+_JIT_NAMES = {"jit", "pallas_call"}
+
+
+def _dtype_of(call: ast.Call) -> Optional[str]:
+    """Literal compute dtype at a chain call site, if spelled out."""
+    for kw_name in ("dtype", "compute_dtype"):
+        node = keyword_arg(call, kw_name)
+        if node is None:
+            continue
+        s = const_str(node)
+        if s is not None:
+            return s
+        name = dotted_name(node)
+        if name:
+            return name.rsplit(".", 1)[-1]
+    return None
+
+
+def _draws_noise(fn: Optional[ast.AST], limits: KernelLimits) -> bool:
+    if fn is None:
+        return False
+    return any(isinstance(n, ast.Call) and
+               (call_name(n) or "").rsplit(".", 1)[-1] in limits.noise_calls
+               for n in ast.walk(fn))
+
+
+def _kernel_body_names(tree: ast.Module) -> Set[str]:
+    """Names of functions handed to jit()/pallas_call() as kernel bodies."""
+    names: Set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (call_name(node) or "").rsplit(".", 1)[-1] not in _JIT_NAMES:
+            continue
+        if node.args and isinstance(node.args[0], ast.Name):
+            names.add(node.args[0].id)
+    return names
+
+
+def _is_jit_decorated(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        name = dotted_name(dec if not isinstance(dec, ast.Call) else dec.func)
+        if name and name.rsplit(".", 1)[-1] in {"jit", "partial"}:
+            if name.rsplit(".", 1)[-1] == "jit":
+                return True
+            if isinstance(dec, ast.Call) and any(
+                    (dotted_name(a) or "").rsplit(".", 1)[-1] == "jit"
+                    for a in dec.args):
+                return True
+    return False
+
+
+def _chain_site_findings(info: ModuleInfo, call: ast.Call,
+                         limits: KernelLimits) -> List[Finding]:
+    out: List[Finding] = []
+    fn_name = (call_name(call) or "").rsplit(".", 1)[-1]
+    ignored = info.ignored_rules(call.lineno)
+    where = f"{qualname(call)}:{fn_name}"
+
+    dtype = _dtype_of(call)
+    block_l = keyword_arg(call, "block_l")
+    lit_block = const_int(block_l) if block_l is not None else None
+    if lit_block is not None and "KN001" not in ignored:
+        quantum = limits.sublane_for(dtype or "float32")
+        if lit_block <= 0 or lit_block % quantum != 0:
+            out.append(Finding(
+                "KN001", info.path, block_l.lineno, where,
+                f"block_l={lit_block} is not a positive multiple of the "
+                f"sublane quantum {quantum} for dtype "
+                f"{dtype or 'float32'}",
+                hint=f"round block_l up to a multiple of {quantum} (or drop "
+                     f"the literal and let plan_chain pad it)"))
+
+    budget = keyword_arg(call, "vmem_budget")
+    lit_budget = const_int(budget) if budget is not None else None
+    if lit_budget is not None and "KN002" not in ignored \
+            and lit_budget > limits.vmem_limit_real:
+        out.append(Finding(
+            "KN002", info.path, budget.lineno, where,
+            f"vmem_budget={lit_budget} exceeds the largest real-accelerator "
+            f"VMEM ceiling ({limits.vmem_limit_real} bytes) in the "
+            f"DeviceSpec table",
+            hint="budgets above the device ceiling make the planner pick "
+                 "block shapes that cannot compile; use a table entry's "
+                 "vmem_limit"))
+
+    if "KN003" not in ignored:
+        narrow = keyword_arg(call, "allow_narrow")
+        is_narrow = (isinstance(narrow, ast.Constant)
+                     and narrow.value is True) \
+            or (dtype in limits.narrow_dtypes)
+        if is_narrow and _draws_noise(enclosing_function(call), limits):
+            node = narrow if narrow is not None else call
+            out.append(Finding(
+                "KN003", info.path, node.lineno, where,
+                "narrow compute dtype requested on a chain inside a "
+                "noise-drawing function; calibrated noise must stay float32",
+                hint="keep allow_narrow=False wherever the function draws "
+                     "noise (reconstruction-only paths may opt in)"))
+    return out
+
+
+def _blockspec_findings(info: ModuleInfo, call: ast.Call,
+                        limits: KernelLimits) -> List[Finding]:
+    if (call_name(call) or "").rsplit(".", 1)[-1] != "BlockSpec":
+        return []
+    if "KN005" in info.ignored_rules(call.lineno):
+        return []
+    shape = call.args[0] if call.args else keyword_arg(call, "block_shape")
+    if not isinstance(shape, ast.Tuple) or not shape.elts:
+        return []
+    minor = const_int(shape.elts[-1])
+    if minor is None or minor % limits.lane == 0:
+        return []
+    return [Finding(
+        "KN005", info.path, shape.lineno,
+        f"{qualname(call)}:BlockSpec",
+        f"BlockSpec minor dimension {minor} is not a multiple of the lane "
+        f"quantum ({limits.lane})",
+        hint=f"pad the minor block dimension to a multiple of "
+             f"{limits.lane}; partial lanes waste the whole vector register")]
+
+
+def _host_effect_findings(info: ModuleInfo, limits: KernelLimits
+                          ) -> List[Finding]:
+    out: List[Finding] = []
+    kernel_names = _kernel_body_names(info.tree)
+    for fn in [n for n in ast.walk(info.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        if not (_is_jit_decorated(fn) or fn.name in kernel_names):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if not name:
+                continue
+            bad = name in limits.host_effect_exact or any(
+                name.startswith(p) for p in limits.host_effect_prefixes)
+            if not bad:
+                continue
+            if "KN004" in info.ignored_rules(node.lineno):
+                continue
+            out.append(Finding(
+                "KN004", info.path, node.lineno,
+                f"{qualname(node)}:{name}",
+                f"host side effect {name!r} inside jitted/kernel body "
+                f"{fn.name!r}",
+                hint="host calls trace to a constant (RNG/clock) or break "
+                     "the kernel; hoist them out and pass values in as "
+                     "arguments"))
+    return out
+
+
+def check_kernels(info: ModuleInfo,
+                  limits: Optional[KernelLimits] = None) -> List[Finding]:
+    limits = limits or kernel_limits()
+    findings: List[Finding] = []
+    chain = limits.chain_calls
+    for node in walk_in_order(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if (call_name(node) or "").rsplit(".", 1)[-1] in chain:
+            findings.extend(_chain_site_findings(info, node, limits))
+        findings.extend(_blockspec_findings(info, node, limits))
+    findings.extend(_host_effect_findings(info, limits))
+    return findings

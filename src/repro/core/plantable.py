@@ -32,6 +32,7 @@ consume one interface with no ``isinstance`` branching.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import math
 import weakref
@@ -544,8 +545,6 @@ def plan_table(workload: MarginalWorkload) -> PlanTable:
     while len(_TABLE_CACHE) >= _TABLE_CACHE_MAX:
         _TABLE_CACHE.popitem(last=False)
     _TABLE_CACHE[key] = t
-    try:
+    with contextlib.suppress(TypeError):
         weakref.finalize(workload, _TABLE_CACHE.pop, key, None)
-    except TypeError:
-        pass
     return t

@@ -157,7 +157,6 @@ class ReleaseServing:
 
     def _postprocess_total(self, measurements) -> Optional[float]:
         """Total-count pin for the consistency fit (None: fit it)."""
-        return None
 
     def _check_postprocess(self) -> None:
         """Raise when this plan family's tables are not plain marginals."""

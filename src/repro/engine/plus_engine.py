@@ -235,7 +235,7 @@ class PlusEngine(ReleaseServing, ChainRegistry):
                     allow_narrow=self._chain_allow_narrow(key)
                 ).block_until_ready()
                 self.stats.compile_warmups += 1
-        for tok, cliques in self._measure_groups.items():
+        for tok in self._measure_groups:
             if not tok:
                 continue
             s = self._measure_specs[tok]

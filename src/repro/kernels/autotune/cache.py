@@ -9,9 +9,11 @@ so concurrent serving processes never observe a torn file.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
+import threading
 from typing import Dict, Optional
 
 CACHE_VERSION = 1
@@ -33,55 +35,63 @@ class TuningCache:
 
     ``get``/``put`` operate on plain dicts (the tuner owns the TunedConfig
     dataclass); the cache only enforces the version/device envelope.
+
+    Thread-safe: the serve worker and a tenant-registration warmup can tune
+    concurrently, so the lazy first load and every mutation serialize on one
+    lock; ``load`` returns a snapshot copy rather than the live dict.
     """
 
     def __init__(self, device_kind: str, path: Optional[str] = None):
         self.device_kind = device_kind
         self.path = path or os.path.join(default_cache_dir(),
                                          f"{_slug(device_kind)}.json")
-        self._entries: Optional[Dict[str, dict]] = None
+        self._lock = threading.Lock()
+        self._entries: Optional[Dict[str, dict]] = None  # guarded-by: _lock
 
     # ------------------------------------------------------------------ load
     def load(self) -> Dict[str, dict]:
+        with self._lock:
+            return dict(self._load_locked())
+
+    def _load_locked(self) -> Dict[str, dict]:  # requires-lock: _lock
         if self._entries is not None:
             return self._entries
         self._entries = {}
-        try:
+        # missing/corrupt file == empty cache
+        with contextlib.suppress(OSError, ValueError):
             with open(self.path) as f:
                 blob = json.load(f)
             if (blob.get("version") == CACHE_VERSION
                     and blob.get("device_kind") == self.device_kind
                     and isinstance(blob.get("entries"), dict)):
                 self._entries = dict(blob["entries"])
-        except (OSError, ValueError):
-            pass                       # missing/corrupt file == empty cache
         return self._entries
 
     def get(self, key: str) -> Optional[dict]:
-        return self.load().get(key)
+        with self._lock:
+            return self._load_locked().get(key)
 
     # ----------------------------------------------------------------- store
     def put(self, key: str, config: dict) -> None:
-        entries = self.load()
-        entries[key] = config
-        self._write(entries)
+        with self._lock:
+            entries = self._load_locked()
+            entries[key] = config
+            self._write(dict(entries))
 
     def _write(self, entries: Dict[str, dict]) -> None:
         blob = {"version": CACHE_VERSION, "device_kind": self.device_kind,
                 "entries": entries}
         d = os.path.dirname(self.path)
-        try:
+        # read-only FS: keep the in-memory view
+        with contextlib.suppress(OSError):
             os.makedirs(d, exist_ok=True)
             fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
             with os.fdopen(fd, "w") as f:
                 json.dump(blob, f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
-        except OSError:
-            pass                       # read-only FS: keep the in-memory view
 
     def clear(self) -> None:
-        self._entries = {}
-        try:
+        with self._lock:
+            self._entries = {}
+        with contextlib.suppress(OSError):
             os.unlink(self.path)
-        except OSError:
-            pass

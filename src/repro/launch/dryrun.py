@@ -311,7 +311,8 @@ def main():
         for a, s, m in cells:
             path = os.path.join(args.out, f"{a}__{s}__{m}.json")
             if os.path.exists(path):
-                st = json.load(open(path)).get("status")
+                with open(path) as fh:
+                    st = json.load(fh).get("status")
                 if st in ("ok", "skipped"):
                     continue
             cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,

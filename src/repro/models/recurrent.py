@@ -207,8 +207,7 @@ def mlstm_recurrent_oracle(p, x, *, cfg):
         hs.append(h)
         m = m_new
     hs = jnp.stack(hs, axis=1)                            # (B,S,H,dh)
-    y = hs.reshape(B, S, H * dh) @ p["wo"].astype(jnp.float32)
-    return y
+    return hs.reshape(B, S, H * dh) @ p["wo"].astype(jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -327,9 +327,8 @@ class Model:
             x = x * math.sqrt(cfg.d_model)
         else:
             x = batch["embeds"]     # modality frontend stub: precomputed
-        x = logical(x.astype(jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
-                             else jnp.float32), "batch", "seq", "dmodel")
-        return x
+        return logical(x.astype(jnp.bfloat16 if cfg.compute_dtype == "bfloat16"
+                                else jnp.float32), "batch", "seq", "dmodel")
 
     def _encode(self, params, batch):
         cfg = self.cfg

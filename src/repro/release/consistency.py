@@ -373,7 +373,7 @@ def solve_consistency(plan: BasePlan, tables: Mapping[Clique, np.ndarray],
     rz = float(xp.vdot(resid, z))
     it = 0
     rel = 1.0
-    for it in range(1, maxiter + 1):
+    for it in range(1, maxiter + 1):  # noqa: B007 - it is reported after the loop
         ap = amv(p)
         pap = float(xp.vdot(p, ap))
         if pap <= 0:

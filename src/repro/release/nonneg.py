@@ -129,7 +129,7 @@ def project_nonneg(domain: Domain, tables: Mapping[Clique, np.ndarray],
     """
     cliques = list(tables.keys())
     out: Dict[Clique, np.ndarray] = {}
-    for dims, group in signature_groups(domain, cliques).items():
+    for group in signature_groups(domain, cliques).values():
         y = np.stack([np.asarray(tables[c], np.float64).reshape(-1)
                       for c in group])
         q = simplex_project_batch(y, total, backend)

@@ -144,7 +144,8 @@ def load_records(artifact_dir_: Optional[str] = None, mesh: str = "single"
     d = artifact_dir() if artifact_dir_ is None else artifact_dir_
     recs = []
     for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
-        recs.append(json.load(open(f)))
+        with open(f) as fh:
+            recs.append(json.load(fh))
     return recs
 
 

@@ -76,7 +76,8 @@ class BudgetLedger:
         # Unbuffered binary append: tell() is a byte offset and a failed
         # write leaves no hidden buffered tail, so _append can roll a
         # partial record back with one ftruncate.
-        self._fh: Optional[io.RawIOBase] = open(self.path, "ab", buffering=0)
+        self._fh: Optional[io.RawIOBase] = open(  # noqa: SIM115 - lives until close()
+            self.path, "ab", buffering=0)
 
     # ------------------------------------------------------------- replay
     def _replay(self) -> int:

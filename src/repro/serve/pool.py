@@ -38,8 +38,8 @@ class EnginePool:
         self.pin_count = int(pin_count)
         self._lock = threading.Lock()
         self._uses: Dict[tuple, Dict[str, int]] = defaultdict(
-            lambda: defaultdict(int))
-        self._tenant_total: Dict[str, int] = defaultdict(int)
+            lambda: defaultdict(int))                  # guarded-by: _lock
+        self._tenant_total: Dict[str, int] = defaultdict(int)  # guarded-by: _lock
 
     def engine_for(self, tenant: str, plan, use_kernel: bool = False,
                    dtype=None, secure: bool = False, digits: int = 4):
@@ -58,12 +58,12 @@ class EnginePool:
             self._repin()
             return eng
 
-    def _score(self, key: tuple) -> float:
+    def _score(self, key: tuple) -> float:  # requires-lock: _lock
         return sum(n / self._tenant_total[t]
                    for t, n in self._uses.get(key, {}).items()
                    if self._tenant_total[t])
 
-    def _repin(self) -> None:
+    def _repin(self) -> None:  # requires-lock: _lock
         live = list(self.cache._entries)
         # prune use counts for evicted/dead keys so scores track live traffic
         for k in [k for k in self._uses if k not in self.cache._entries]:

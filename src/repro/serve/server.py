@@ -137,10 +137,10 @@ class ReleaseServer:
         self.pool = EnginePool() if pool is None else pool
         self.stats = ServerStats()
         self._base_key = jax.random.PRNGKey(noise_seed)
-        self._sessions: Dict[str, _TenantSession] = {}
+        self._sessions: Dict[str, _TenantSession] = {}  # guarded-by: _sessions_lock
         self._sessions_lock = threading.Lock()
         self._queue: "queue.Queue[_Pending]" = queue.Queue()
-        self._counter = 0
+        self._counter = 0                              # guarded-by: _counter_lock
         self._counter_lock = threading.Lock()
         self._stop_evt = threading.Event()
         self._resume_evt = threading.Event()

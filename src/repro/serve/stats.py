@@ -39,7 +39,7 @@ class TenantStats:
     rejected_budget: int = 0       # BudgetExhausted at charge time
     failed: int = 0                # non-budget errors
     batched_requests: int = 0      # served inside a fused multi-request batch
-    _latencies: Deque[float] = field(
+    _latencies: Deque[float] = field(                  # guarded-by: _lat_lock
         default_factory=lambda: deque(maxlen=4096))
     _lat_lock: threading.Lock = field(default_factory=threading.Lock,
                                       repr=False)
@@ -68,11 +68,11 @@ class ServerStats:
 
     def __init__(self):
         self._lock = threading.Lock()
-        self.tenants: Dict[str, TenantStats] = {}
-        self.batches = 0               # worker drains
-        self.batched_launch_groups = 0  # fused signature groups launched
-        self.queue_depth = 0
-        self.queue_depth_max = 0
+        self.tenants: Dict[str, TenantStats] = {}      # guarded-by: _lock
+        self.batches = 0               # worker drains (guarded-by: _lock)
+        self.batched_launch_groups = 0  # fused groups (guarded-by: _lock)
+        self.queue_depth = 0                           # guarded-by: _lock
+        self.queue_depth_max = 0                       # guarded-by: _lock
 
     def tenant(self, tenant: str) -> TenantStats:
         with self._lock:

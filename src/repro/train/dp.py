@@ -67,10 +67,9 @@ def per_example_clipped_grad(loss_fn, params, batch, clip_norm: float):
                             for x in jax.tree_util.tree_leaves(g)))
     n = norms(grads)
     scale = jnp.minimum(1.0, clip_norm / jnp.maximum(n, 1e-12))
-    clipped = jax.tree_util.tree_map(
+    return jax.tree_util.tree_map(
         lambda g: jnp.mean(g * scale.reshape((-1,) + (1,) * (g.ndim - 1)),
                            axis=0), grads)
-    return clipped
 
 
 def add_dp_noise(grads, key, clip_norm: float, noise_multiplier: float,

@@ -1,0 +1,26 @@
+# repro-lint: scope=serve
+"""PF002 fixture: measurement not dominated by a ledger charge.
+
+The module pragma above opts this file into serve-scope rules even though
+it lives under tests/fixtures/.  ``Worker.serve_uncharged`` measures with
+no charge anywhere on the path; ``Worker.serve_charged`` shows the clean
+protocol (charge earlier in the same method) and must NOT fire.
+"""
+
+
+class Worker:
+    def serve_uncharged(self, engine, req, key):
+        return engine.measure(req.marginals, key)   # line 13: PF002
+
+    def serve_charged(self, engine, req, key):
+        self.ledger.charge(req.tenant, req.cost)
+        return engine.measure(req.marginals, key)   # charged above: clean
+
+    def batch(self, engine, pending, key):
+        self.ledger.charge("t", 1.0)
+        for req in pending:
+            self._serve_one(engine, req, key)
+
+    def _serve_one(self, engine, req, key):
+        # every intra-class caller (batch) charges first: clean
+        return engine.measure(req.marginals, key)

@@ -1,0 +1,37 @@
+"""KN clean fixture: aligned literals, float32 noise, pure kernel bodies.
+
+Must produce ZERO findings (tests/test_analysis.py asserts emptiness).
+"""
+import jax
+import jax.numpy as jnp
+
+
+def build_aligned():
+    # multiple of the bfloat16 sublane quantum (16), budget under 32 MiB
+    return plan_chain(shapes, block_l=64, dtype="bfloat16",
+                      vmem_budget=16 * 1024 * 1024)
+
+
+def sample_fp32(mats, x, key):
+    z = jax.random.normal(key, (8,))
+    y = fused_chain_matvec(mats, x, allow_narrow=False)
+    return y + z
+
+
+def reconstruct_narrow(mats, x):
+    # narrow chain is fine here: no noise is drawn in this function
+    return fused_chain_matvec(mats, x, allow_narrow=True)
+
+
+@jax.jit
+def jitted_pure(x):
+    return jnp.tanh(x) * 2.0
+
+
+def make_clean_kernel():
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2.0
+
+    return pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=[pl.BlockSpec((8, 128), lambda i: (0, 0))])

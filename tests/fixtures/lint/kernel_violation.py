@@ -1,0 +1,39 @@
+"""KN fixture: one violation per kernel-invariant rule.
+
+KN001 (bad block_l), KN002 (vmem_budget over the device ceiling), KN003
+(allow_narrow in a noise-drawing function), KN004 (host RNG inside a jitted
+body; print inside a pallas kernel body), KN005 (BlockSpec minor dim not
+lane-aligned).  Line numbers are asserted by tests/test_analysis.py.
+"""
+import jax
+import numpy as np
+
+
+def build_bad_block():
+    return plan_chain(shapes, block_l=12, dtype="float32")      # KN001
+
+
+def build_bad_budget():
+    return plan_chain(shapes, vmem_budget=64 * 1024 * 1024)     # KN002
+
+
+def sample_with_narrow_chain(mats, x, key):
+    z = jax.random.normal(key, (8,))
+    y = fused_chain_matvec(mats, x, allow_narrow=True)          # KN003
+    return y + z
+
+
+@jax.jit
+def jitted_with_host_rng(x):
+    seed = np.random.normal()                                   # KN004
+    return x * seed
+
+
+def make_noisy_kernel():
+    def kernel(x_ref, o_ref):
+        print("debug")                                          # KN004
+        o_ref[...] = x_ref[...]
+
+    return pl.pallas_call(
+        kernel, grid=(1,),
+        in_specs=[pl.BlockSpec((8, 100), lambda i: (0, 0))])    # KN005

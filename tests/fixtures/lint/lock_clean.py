@@ -1,0 +1,26 @@
+"""LK clean fixture: every guarded access holds the lock.
+
+Must produce ZERO findings (tests/test_analysis.py asserts emptiness).
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0                          # guarded-by: _lock
+
+    def bump(self):
+        with self._lock:
+            self._n += 1
+
+    def value(self):
+        with self._lock:
+            return self._n
+
+    def _drain(self):  # requires-lock: _lock
+        self._n = 0
+
+    def reset(self):
+        with self._lock:
+            self._drain()

@@ -1,0 +1,27 @@
+"""LK fixture: guarded-by violations.
+
+LK001 twice (direct unguarded field access; call to a requires-lock helper
+without the lock) and LK002 once (annotation names a lock the class never
+creates).  Line numbers are asserted by tests/test_analysis.py.
+"""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0                          # guarded-by: _lock
+
+    def bump_unlocked(self):
+        self._n += 1                         # line 16: LK001
+
+    def _drain(self):  # requires-lock: _lock
+        self._n = 0
+
+    def reset_unlocked(self):
+        self._drain()                        # line 22: LK001 (caller side)
+
+
+class Phantom:
+    def __init__(self):
+        self._items = []                     # guarded-by: _missing  -> LK002

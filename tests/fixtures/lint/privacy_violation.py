@@ -1,0 +1,21 @@
+"""PF001 fixture: raw taint reaches release sinks without a sanitizer.
+
+Exercises: source call, source attribute, source parameter, taint through
+arithmetic/comprehensions, and the ReleaseResult constructor sink.
+Expected findings are asserted by tests/test_analysis.py — keep line
+numbers stable when editing.
+"""
+
+
+def resolve_raw_histogram(fut, records):            # `records` is a source param
+    hist = exact_marginals_from_x(records)
+    fut.set_result(hist)                            # line 12: PF001
+
+
+def resolve_request_payload(fut, req):
+    payload = [m * 2 for m in req.marginals]        # source attr, comp taint
+    fut.set_result(payload)                         # line 17: PF001
+
+
+def construct_release(req):
+    return ReleaseResult(values=req.marginals)      # line 21: PF001

@@ -1,0 +1,184 @@
+"""repro-lint analyzer tests: fixture corpus, baseline round-trip, CLI exit
+codes, and the two gate-flip guarantees (deleting a ledger charge or a lock
+guard in serve/ must turn the gate red)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis import (Baseline, Finding, analyze_file, analyze_paths,
+                            analyze_source, iter_py_files)
+from repro.analysis.registry import ALL_RULES, kernel_limits
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+CLI = [sys.executable, str(REPO / "tools" / "repro_lint.py")]
+
+
+def fixture_findings(name):
+    return analyze_file(str(FIXTURES / name), repo_root=str(REPO))
+
+
+# ------------------------------------------------------------------ fixtures
+@pytest.mark.parametrize("name, expected", [
+    ("privacy_violation.py",
+     {("PF001", 12), ("PF001", 17), ("PF001", 21)}),
+    ("charge_violation.py", {("PF002", 13)}),
+    ("kernel_violation.py",
+     {("KN001", 13), ("KN002", 17), ("KN003", 22),
+      ("KN004", 28), ("KN004", 34), ("KN005", 39)}),
+    ("lock_violation.py",
+     {("LK001", 16), ("LK001", 22), ("LK002", 25)}),
+])
+def test_violation_fixture(name, expected):
+    got = {(f.rule, f.line) for f in fixture_findings(name)}
+    assert got == expected
+
+
+@pytest.mark.parametrize("name", [
+    "privacy_clean.py", "kernel_clean.py", "lock_clean.py"])
+def test_clean_fixture(name):
+    assert fixture_findings(name) == []
+
+
+def test_every_fixture_rule_is_cataloged():
+    findings = analyze_paths([str(FIXTURES)], repo_root=str(REPO))
+    assert findings, "fixture corpus must exercise the analyzer"
+    assert {f.rule for f in findings} <= set(ALL_RULES)
+
+
+def test_parse_error_yields_lint000(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n")
+    (finding,) = analyze_file(str(bad))
+    assert finding.rule == "LINT000"
+
+
+def test_inline_ignore_pragma():
+    src = ("def f(fut, records):\n"
+           "    h = exact_marginals_from_x(records)\n"
+           "    fut.set_result(h)  # repro-lint: ignore[PF001]\n")
+    assert analyze_source(src, "x/a.py") == []
+
+
+def test_scope_pragma_gates_serve_rules():
+    # same source WITHOUT the pragma, outside serve/: PF002 must not fire
+    text = (FIXTURES / "charge_violation.py").read_text()
+    no_pragma = "\n".join(text.splitlines()[1:])
+    assert analyze_source(no_pragma, "tests/fixtures/lint/x.py") == []
+
+
+# ------------------------------------------------------------------ baseline
+def test_baseline_round_trip(tmp_path):
+    findings = fixture_findings("lock_violation.py")
+    path = tmp_path / "baseline.json"
+    Baseline.from_findings(findings, reason="fixture").save(str(path))
+    loaded = Baseline.load(str(path))
+    new, waived = loaded.split(findings)
+    assert new == [] and len(waived) == len(findings)
+    assert loaded.stale(findings) == []
+    assert loaded.stale([]) == sorted(f.fingerprint for f in findings)
+
+
+def test_fingerprint_is_line_independent():
+    a = Finding("LK001", "p.py", 10, "C.m:_n", "x")
+    b = Finding("LK001", "p.py", 99, "C.m:_n", "y")
+    assert a.fingerprint == b.fingerprint
+
+
+def test_baseline_version_mismatch(tmp_path):
+    path = tmp_path / "baseline.json"
+    path.write_text(json.dumps({"version": 999, "waivers": []}))
+    with pytest.raises(ValueError):
+        Baseline.load(str(path))
+
+
+# ----------------------------------------------------------------------- CLI
+def run_cli(*args, cwd=None):
+    return subprocess.run(CLI + list(args), capture_output=True, text=True,
+                          cwd=cwd or str(REPO))
+
+
+def test_cli_gate_clean_on_tree():
+    proc = run_cli("--gate")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+@pytest.mark.parametrize("name", [
+    "privacy_violation.py", "charge_violation.py",
+    "kernel_violation.py", "lock_violation.py"])
+def test_cli_gate_fails_each_violation_class(name):
+    proc = run_cli("--gate", str(FIXTURES / name))
+    assert proc.returncode == 1
+
+
+def test_cli_no_such_path():
+    assert run_cli("--gate", "definitely/not/here").returncode == 2
+
+
+def test_cli_rules_lists_catalog():
+    proc = run_cli("--rules")
+    assert proc.returncode == 0
+    for rule in ALL_RULES:
+        assert rule in proc.stdout
+
+
+def test_cli_json_output():
+    proc = run_cli("--json", str(FIXTURES / "lock_violation.py"))
+    assert proc.returncode == 1
+    blob = json.loads(proc.stdout)
+    assert {f["rule"] for f in blob} == {"LK001", "LK002"}
+    assert all("fingerprint" in f for f in blob)
+
+
+def test_cli_write_baseline_then_gate(tmp_path):
+    base = tmp_path / "b.json"
+    target = str(FIXTURES / "kernel_violation.py")
+    proc = run_cli("--write-baseline", "--baseline", str(base), target)
+    assert proc.returncode == 0 and base.exists()
+    assert run_cli("--gate", "--baseline", str(base), target).returncode == 0
+
+
+# ----------------------------------------------------------------- gate flip
+def test_deleting_ledger_charge_flips_gate():
+    text = (REPO / "src/repro/serve/server.py").read_text()
+    mutated = text.replace("self.ledger.charge(", "self._audit(")
+    assert mutated != text
+    rules = {f.rule for f in analyze_source(mutated,
+                                            "src/repro/serve/server.py")}
+    assert "PF002" in rules
+    assert analyze_source(text, "src/repro/serve/server.py") == []
+
+
+def test_deleting_lock_guard_flips_gate():
+    text = (REPO / "src/repro/serve/pool.py").read_text()
+    mutated = text.replace(
+        "        with self._lock:\n            eng = self.cache.get",
+        "        if True:\n            eng = self.cache.get")
+    assert mutated != text
+    rules = {f.rule for f in analyze_source(mutated,
+                                            "src/repro/serve/pool.py")}
+    assert "LK001" in rules
+    assert analyze_source(text, "src/repro/serve/pool.py") == []
+
+
+# ------------------------------------------------------------------- plumbing
+def test_iter_py_files_skips_pycache(tmp_path):
+    (tmp_path / "__pycache__").mkdir()
+    (tmp_path / "__pycache__" / "x.py").write_text("")
+    (tmp_path / "a.py").write_text("")
+    names = [os.path.basename(p) for p in iter_py_files(str(tmp_path))]
+    assert names == ["a.py"]
+
+
+def test_kernel_limits_bind_to_live_tables():
+    lim = kernel_limits()
+    assert lim.sublane_for("float32") == 8
+    assert lim.sublane_for("bfloat16") == 16
+    assert lim.lane == 128
+    assert lim.vmem_limit_real == 32 * 1024 * 1024

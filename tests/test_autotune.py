@@ -194,6 +194,19 @@ def test_tuning_cache_round_trip(tmp_path):
     assert c2.get("nope") is None
 
 
+def test_tuning_cache_concurrent_puts(tmp_path):
+    """Racing puts must not lose entries (lazy load + mutate is locked)."""
+    import threading
+    c = TuningCache("cpu", path=str(tmp_path / "t.json"))
+    threads = [threading.Thread(target=c.put, args=(f"k{i}", {"block_l": 8}))
+               for i in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(c.load()) == 16
+
+
 def test_tuning_cache_invalidation(tmp_path):
     path = str(tmp_path / "t.json")
     TuningCache("cpu", path=path).put("k", {"block_l": 64})
@@ -201,12 +214,15 @@ def test_tuning_cache_invalidation(tmp_path):
     assert TuningCache("tpu v5 lite", path=path).get("k") is None
     # version bump: whole file invalid
     import json
-    blob = json.load(open(path))
+    with open(path) as fh:
+        blob = json.load(fh)
     blob["version"] = CACHE_VERSION + 1
-    json.dump(blob, open(path, "w"))
+    with open(path, "w") as fh:
+        json.dump(blob, fh)
     assert TuningCache("cpu", path=path).get("k") is None
     # corrupt file: empty cache, no raise
-    open(path, "w").write("{not json")
+    with open(path, "w") as fh:
+        fh.write("{not json")
     assert TuningCache("cpu", path=path).get("k") is None
 
 

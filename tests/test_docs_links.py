@@ -50,6 +50,23 @@ def test_checker_skips_external_and_code_fences(tmp_path):
     assert check_file(str(ok), str(tmp_path)) == []
 
 
+def test_checker_catches_dangling_section_refs(tmp_path):
+    a = tmp_path / "a.md"
+    a.write_text("## §1 One\n\nsee §2 and [b.md §9](b.md) and b.md §1\n")
+    (tmp_path / "b.md").write_text("## §1 Only\n")
+    errors = check_file(str(a), str(tmp_path))
+    assert len(errors) == 2
+    assert "dangling same-file reference §2" in errors[0]
+    assert "b.md §9" in errors[1]
+
+
+def test_section_refs_skip_fences_and_unnumbered_files(tmp_path):
+    ok = tmp_path / "ok.md"
+    ok.write_text("# No section numbers here\n\n§99 is fine: this file has "
+                  "no § headings\n```\nDESIGN.md §42 never checked\n```\n")
+    assert check_file(str(ok), str(tmp_path)) == []
+
+
 def test_main_exit_codes(tmp_path, capsys):
     good = tmp_path / "g.md"
     good.write_text("# Hi\n")

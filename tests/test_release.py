@@ -101,7 +101,7 @@ def test_fix_total_pins_every_marginal_sum():
     cg = solve_consistency(plan, _perturb(tables, rng), fix_total=1234.0,
                            backend="host")
     assert cg.total == 1234.0
-    for c, q in cg.marginals().items():
+    for q in cg.marginals().values():
         assert abs(q.sum() - 1234.0) < 1e-6 * 1234.0
     dense = dense_wls_oracle(plan, _perturb(tables, rng), fix_total=777.0)
     assert dense.total == 777.0

@@ -68,7 +68,8 @@ def test_dryrun_artifacts_complete_and_coherent():
     assert len(base) == 80, f"expected 40 cells × 2 meshes, got {len(base)}"
     n_ok = n_skip = 0
     for f in base:
-        rec = json.load(open(f))
+        with open(f) as fh:
+            rec = json.load(fh)
         assert rec["status"] in ("ok", "skipped"), (f, rec.get("error"))
         if rec["status"] == "ok":
             n_ok += 1

@@ -53,7 +53,7 @@ def test_train_loss_decreases():
     b0 = next(gen)
     batch = {"tokens": jnp.asarray(b0["tokens"]),
              "labels": jnp.asarray(b0["labels"])}
-    for i in range(30):
+    for _ in range(30):
         state, metrics = step(state, batch)
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] - 0.2, losses[::10]

@@ -6,6 +6,11 @@ flake on the network.  Relative targets are resolved against the containing
 file; ``#anchor`` fragments are validated against the GitHub-style slugs of
 the target file's headings.
 
+Section references are validated too: ``DESIGN.md §14`` (named file) and
+bare ``§3.2`` (same file) must point at an existing ``## §N``-numbered
+heading — a renumbered or deleted section turns every stale textual
+reference into a CI failure, not a silent lie.  Code fences are exempt.
+
 Usage::
 
     python tools/check_doc_links.py README.md docs/*.md
@@ -22,6 +27,8 @@ LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
 IMAGE_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+SECTION_HEADING_RE = re.compile(r"^#{1,6}\s+§(\d+(?:\.\d+)*)\b", re.MULTILINE)
+SECTION_REF_RE = re.compile(r"(?:([\w./-]+\.md)\s+)?§(\d+(?:\.\d+)*)")
 
 
 def github_slug(heading: str) -> str:
@@ -45,6 +52,42 @@ def heading_slugs(path: str) -> set:
     return slugs
 
 
+def section_numbers(path: str) -> set:
+    """§ numbers ('14', '3.2') declared by a file's ``## §N`` headings."""
+    with open(path, encoding="utf-8") as fh:
+        body = CODE_FENCE_RE.sub("", fh.read())
+    return set(SECTION_HEADING_RE.findall(body))
+
+
+def check_section_refs(path: str, body: str) -> list:
+    errors = []
+    own = None                                       # lazy: most files have none
+    for m in SECTION_REF_RE.finditer(body):
+        named, num = m.group(1), m.group(2)
+        if named:
+            dest = os.path.normpath(
+                os.path.join(os.path.dirname(path), named))
+            if not os.path.exists(dest):
+                # try docs/ for README-style "DESIGN.md §10" shorthand
+                alt = os.path.join(os.path.dirname(path), "docs", named)
+                if os.path.exists(alt):
+                    dest = alt
+                else:
+                    errors.append(f"{path}: §-reference to missing file: "
+                                  f"{named} §{num}")
+                    continue
+            declared = section_numbers(dest)
+            if declared and num not in declared:
+                errors.append(f"{path}: dangling reference {named} §{num} "
+                              f"(no '§{num}' heading there)")
+        else:
+            if own is None:
+                own = section_numbers(path)
+            if own and num not in own:
+                errors.append(f"{path}: dangling same-file reference §{num}")
+    return errors
+
+
 def check_file(path: str, repo_root: str) -> list:
     errors = []
     with open(path, encoding="utf-8") as fh:
@@ -55,10 +98,8 @@ def check_file(path: str, repo_root: str) -> list:
         if target.startswith(("http://", "https://", "mailto:")):
             continue
         base, _, frag = target.partition("#")
-        if not base:                                     # same-file anchor
-            dest = path
-        else:
-            dest = os.path.normpath(os.path.join(os.path.dirname(path), base))
+        dest = path if not base else os.path.normpath(   # bare #frag: same file
+            os.path.join(os.path.dirname(path), base))
         rel = os.path.relpath(dest, repo_root)
         in_repo = not os.path.relpath(os.path.abspath(path),
                                       repo_root).startswith("..")
@@ -68,21 +109,19 @@ def check_file(path: str, repo_root: str) -> list:
         if not os.path.exists(dest):
             errors.append(f"{path}: broken link target: {target}")
             continue
-        if frag and dest.endswith(".md"):
-            if frag not in heading_slugs(dest):
-                errors.append(f"{path}: missing anchor #{frag} in {rel} "
-                              f"(from link {target})")
+        if frag and dest.endswith(".md") and frag not in heading_slugs(dest):
+            errors.append(f"{path}: missing anchor #{frag} in {rel} "
+                          f"(from link {target})")
+    errors.extend(check_section_refs(path, body))
     return errors
 
 
 def main(argv=None) -> int:
     args = (argv if argv is not None else sys.argv[1:])
     repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    if args:
-        files = args
-    else:
-        files = ([os.path.join(repo_root, "README.md")]
-                 + sorted(glob.glob(os.path.join(repo_root, "docs", "*.md"))))
+    files = args or (
+        [os.path.join(repo_root, "README.md")]
+        + sorted(glob.glob(os.path.join(repo_root, "docs", "*.md"))))
     errors = []
     for f in files:
         errors.extend(check_file(f, repo_root))

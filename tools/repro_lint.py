@@ -1,0 +1,27 @@
+#!/usr/bin/env python
+"""repro-lint CLI — static analysis gate for the repro tree.
+
+Thin wrapper so CI and developers can run the analyzer without installing
+the package:
+
+    python tools/repro_lint.py --gate          # CI: zero new findings
+    python tools/repro_lint.py src/repro/serve # one subtree
+    python tools/repro_lint.py --rules         # rule catalog
+
+See docs/ANALYSIS.md for the rule catalog, the annotation syntax, and the
+baseline workflow.
+"""
+import os
+import sys
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+from repro.analysis.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:            # e.g. `repro_lint.py --rules | head`
+        os.dup2(os.open(os.devnull, os.O_WRONLY), sys.stdout.fileno())
+        sys.exit(0)
