@@ -31,6 +31,7 @@ from repro.core.domain import Clique
 from repro.core.mechanism import Measurement, noise_dtype
 from repro.core.partition import ROW_EMPTY
 from repro.engine.engine import EngineStats, ReleaseServing
+from repro.obs import TRACER
 
 
 class CompositeEngine(ReleaseServing):
@@ -61,14 +62,17 @@ class CompositeEngine(ReleaseServing):
     def measure(self, marginals: Mapping[Clique, jnp.ndarray],
                 key: jax.Array) -> Dict[Clique, Measurement]:
         """Per-block Algorithm 1; the shared ∅ is block 0's measurement."""
-        self.stats.measure_calls += 1
+        self.stats.bump("measure_calls")
         keys = jax.random.split(key, len(self._engines))
         out: Dict[Clique, Measurement] = {}
-        for b, eng in enumerate(self._engines):
-            mb = dict(eng.measure(marginals, keys[b]))
-            if b > 0:
-                mb[()] = out[()]
-            out.update(mb)
+        with TRACER.span("engine.measure").set(
+                engine="composite", blocks=len(self._engines),
+                use_kernel=self.use_kernel):
+            for b, eng in enumerate(self._engines):
+                mb = dict(eng.measure(marginals, keys[b]))
+                if b > 0:
+                    mb[()] = out[()]
+                out.update(mb)
         return out
 
     def _block_tables(self, measurements: Mapping[Clique, Measurement]
@@ -115,12 +119,16 @@ class CompositeEngine(ReleaseServing):
                     cliques: Optional[Sequence[Clique]] = None
                     ) -> Dict[Clique, np.ndarray]:
         """Per-block Algorithm 2, then stitch the original workload's tables."""
-        self.stats.reconstruct_calls += 1
+        self.stats.bump("reconstruct_calls")
         d = self.plan.decomposition
         total = float(np.asarray(measurements[()].omega,
                                  float).reshape(-1)[0])
         cliques = list(d.workload.cliques if cliques is None else cliques)
-        return self._assemble(self._block_tables(measurements), total, cliques)
+        with TRACER.span("engine.reconstruct").set(
+                engine="composite", blocks=len(self._engines),
+                use_kernel=self.use_kernel):
+            return self._assemble(self._block_tables(measurements), total,
+                                  cliques)
 
     # ---------------------------------------------------------------- release
     def release(self, marginals, key, postprocess: Optional[str] = None,
@@ -152,7 +160,7 @@ class CompositeEngine(ReleaseServing):
                                     mw_rounds=mw_rounds, **post_opts)
                 for bp, tables in zip(self.plan.block_plans, bt)]
         out = self._assemble(post, t_pin, list(self.plan.workload.cliques))
-        self.stats.postprocess_calls += 1
+        self.stats.bump("postprocess_calls")
         if postprocess == "nonneg":
             self._synth_tables = out
         return out, meas

@@ -52,6 +52,7 @@ from repro.core.mechanism import noise_dtype, signature_groups
 from repro.core.plantable import BasePlan
 from repro.core.reconstruct import reconstruct_all_batched, u_chain_factors
 from repro.engine.engine import ChainRegistry, EngineStats, ReleaseServing
+from repro.obs import TRACER
 from repro.kernels.kron_matvec._layout import interpret_default
 from repro.kernels.kron_matvec.fused import fused_chain_matvec
 
@@ -139,7 +140,7 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
         for key, (cp, factors, batch, _epi) in self._chain_plans.items():
             x = jnp.zeros((batch, cp.n_in), jnp.float32)
             fused_chain_matvec(factors, x, key[0]).block_until_ready()
-            self.stats.compile_warmups += 1
+            self.stats.bump("compile_warmups")
 
     # ------------------------------------------------------------ transforms
     def _device_chain(self, factors: List[np.ndarray], x: np.ndarray,
@@ -173,11 +174,11 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
         bound = l1 * growth * max(dims)
         mant = _MANTISSA_BITS[self._chain_dtype_name()]
         if bound < float(1 << mant):
-            self.stats.device_h_groups += 1
+            self.stats.bump("device_h_groups")
             hv = np.rint(self._device_chain(
                 h_factors(dims), vs, dims))
             return hv.astype(np.int64)
-        self.stats.exact_h_groups += 1
+        self.stats.bump("exact_h_groups")
         facs = h_factors(dims, np.int64)
         if bound < float(1 << 62):
             return _np_chain_batched(facs, np.rint(vs).astype(np.int64), dims)
@@ -192,7 +193,7 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
         lanes would overflow a float32 chain."""
         if self._chain_dtype_name() == "float32" and \
                 float(np.abs(noisy).max(initial=0.0)) >= 3e38:
-            self.stats.host_y_groups += 1
+            self.stats.bump("host_y_groups")
             return _np_chain_batched(ypinv_factors(dims),
                                      np.asarray(noisy, np.float64), dims)
         return self._device_chain(ypinv_factors(dims), noisy, dims)
@@ -222,7 +223,13 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
         ``random.Random`` (see :func:`as_np_rng`); draws are
         seed-deterministic per key.
         """
-        self.stats.measure_calls += 1
+        self.stats.bump("measure_calls")
+        with TRACER.span("engine.measure").set(
+                engine="discrete", cliques=len(self.plan.cliques),
+                use_kernel=self.use_kernel):
+            return self._measure_impl(marginals, key, _noise_override)
+
+    def _measure_impl(self, marginals, key, _noise_override=None):
         rng = as_np_rng(key)
         out: Dict[Clique, DiscreteMeasurement] = {}
         for dims, cliques in self._groups.items():
@@ -274,9 +281,11 @@ class DiscreteEngine(ReleaseServing, ChainRegistry):
                     ) -> Dict[Clique, np.ndarray]:
         """Algorithm 2 on the discrete measurements (drop-in ω): batched
         merged U-chains, shared with the continuous engine."""
-        self.stats.reconstruct_calls += 1
-        return reconstruct_all_batched(self.plan, measurements, cliques,
-                                       use_kernel=self.use_kernel)
+        self.stats.bump("reconstruct_calls")
+        with TRACER.span("engine.reconstruct").set(
+                engine="discrete", use_kernel=self.use_kernel):
+            return reconstruct_all_batched(self.plan, measurements, cliques,
+                                           use_kernel=self.use_kernel)
 
     # release()/synthesize() come from ReleaseServing; the secure path pins
     # the consistency fit to the *measured integer total*, so postprocessed

@@ -21,7 +21,6 @@ Usage::
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -36,30 +35,86 @@ from repro.core.residual import sub_matrix
 from repro.core.select import Plan
 from repro.kernels.kron_matvec._layout import pad_to
 from repro.kernels.kron_matvec.fused import fused_chain_matvec, plan_chain
+from repro.obs import REGISTRY, TRACER, AtomicCounter
+
+# Process-wide aggregate of every EngineStats bump, labeled by counter name —
+# the /metrics view of engine activity across all engines in the process
+# (per-engine values stay on each EngineStats instance).
+_ENGINE_EVENTS = REGISTRY.counter(
+    "repro_engine_events_total",
+    "Engine counter bumps aggregated across all engines", labels=("counter",))
 
 
-@dataclass
 class EngineStats:
-    measure_calls: int = 0
-    reconstruct_calls: int = 0
-    measure_signatures: int = 0
-    reconstruct_signatures: int = 0
-    fused_chains: int = 0          # chains that fit the fused VMEM budget
-    fallback_chains: int = 0       # chains planned onto the per-axis path
-    compile_warmups: int = 0
-    tuned_chains: int = 0          # chains whose launch config came from the
-    #                                autotuner (docs/DESIGN.md §14)
-    # DiscreteEngine exactness-boundary counters (docs/DESIGN.md §10):
-    device_h_groups: int = 0       # H groups served by the device chain + rint
-    exact_h_groups: int = 0        # H groups on the exact int64/big-int path
-    host_y_groups: int = 0         # Y† groups on the float64 host fallback
-    # release subsystem (docs/DESIGN.md §11):
-    postprocess_calls: int = 0     # release(..., postprocess=...) invocations
-    synthesize_calls: int = 0      # synthesize(...) invocations
-    # sharded engine-cache provenance (engine/sharded.py): how often this
-    # engine was served from / constructed into the cross-call cache.
-    cache_hits: int = 0
-    cache_misses: int = 0
+    """Per-engine counters, backed by the obs metrics registry.
+
+    Historically a plain dataclass of ints; engines shared through
+    ``EnginePool`` are bumped from the serve worker *and* warmup/HTTP-reader
+    paths, so each field is now an :class:`~repro.obs.AtomicCounter`.  Field
+    access keeps the dataclass surface (``stats.measure_calls`` reads,
+    ``stats.measure_signatures = n`` level-sets), while hot mutation sites
+    use :meth:`bump`, which is atomic and mirrors the event into the global
+    ``repro_engine_events_total{counter=...}`` family for ``/metrics``.
+
+    Field inventory (docs/DESIGN.md §10/§11/§14):
+
+    * measure/reconstruct_calls, measure/reconstruct_signatures
+    * fused_chains / fallback_chains / tuned_chains — chain planning outcome
+    * compile_warmups — warmup launches at construction
+    * device_h_groups / exact_h_groups / host_y_groups — DiscreteEngine
+      exactness boundary
+    * postprocess_calls / synthesize_calls — release subsystem
+    * cache_hits / cache_misses — sharded engine-cache provenance
+    """
+
+    _FIELDS = (
+        "measure_calls", "reconstruct_calls",
+        "measure_signatures", "reconstruct_signatures",
+        "fused_chains", "fallback_chains", "compile_warmups", "tuned_chains",
+        "device_h_groups", "exact_h_groups", "host_y_groups",
+        "postprocess_calls", "synthesize_calls",
+        "cache_hits", "cache_misses",
+    )
+
+    __slots__ = ("_cells",)
+
+    def __init__(self, **initial):
+        self._cells = {f: AtomicCounter(initial.pop(f, 0))
+                       for f in self._FIELDS}
+        if initial:
+            raise TypeError(f"unknown EngineStats fields: {tuple(initial)}")
+
+    def bump(self, name: str, n: int = 1) -> None:
+        """Atomically increment ``name`` and mirror it to /metrics."""
+        self._cells[name].inc(n)
+        _ENGINE_EVENTS.labels(counter=name).inc(n)
+
+    def to_dict(self) -> Dict[str, int]:
+        return {f: int(self._cells[f].value) for f in self._FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v}" for k, v in self.to_dict().items())
+        return f"EngineStats({body})"
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, EngineStats):
+            return self.to_dict() == other.to_dict()
+        return NotImplemented
+
+
+def _stats_field(name: str) -> property:
+    def _get(self) -> int:
+        return int(self._cells[name].value)
+
+    def _set(self, v: int) -> None:
+        self._cells[name].set(v)
+
+    return property(_get, _set)
+
+
+for _f in EngineStats._FIELDS:
+    setattr(EngineStats, _f, _stats_field(_f))
+del _f
 
 
 class ChainRegistry:
@@ -109,11 +164,40 @@ class ChainRegistry:
             self._chain_tune[key] = cfg
             self._chain_roles[key] = role
             if fused:
-                self.stats.fused_chains += 1
+                self.stats.bump("fused_chains")
             else:
-                self.stats.fallback_chains += 1
+                self.stats.bump("fallback_chains")
             if cfg is not None:
-                self.stats.tuned_chains += 1
+                self.stats.bump("tuned_chains")
+            self._publish_roofline(key, cp, batch)
+
+    def _publish_roofline(self, key: tuple, cp, batch: int) -> None:
+        """Export the chain's roofline predictions as gauges.
+
+        Predicted arithmetic intensity, VMEM footprint, and runtime
+        (roofline/cost_model.py) sit next to the measured
+        ``repro_kernel_launch_seconds`` histogram under the same ``chain``
+        label, so predicted-vs-measured drift is a single /metrics query.
+        """
+        try:
+            from repro.obs.naming import chain_label
+            from repro.roofline.cost_model import CostModel
+            cost = CostModel().chain_cost(cp, batch)
+            label = chain_label(key[0], batch, cp.compute_dtype)
+            REGISTRY.gauge(
+                "repro_chain_predicted_intensity",
+                "Roofline-predicted arithmetic intensity (FLOP/byte)",
+                labels=("chain",)).labels(chain=label).set(cost.intensity)
+            REGISTRY.gauge(
+                "repro_chain_vmem_bytes",
+                "Planned VMEM footprint of the fused chain kernel",
+                labels=("chain",)).labels(chain=label).set(cp.vmem_bytes)
+            REGISTRY.gauge(
+                "repro_chain_predicted_seconds",
+                "Roofline-predicted single-launch runtime",
+                labels=("chain",)).labels(chain=label).set(cost.predicted_s)
+        except Exception:   # cost model is advisory; never fail registration
+            pass
 
     def _chain_allow_narrow(self, key: tuple) -> bool:
         """Reconstruct-role chains may serve at a tuned narrow dtype."""
@@ -181,7 +265,7 @@ class ReleaseServing:
             tables = postprocess_release(self.plan, tables, postprocess,
                                          total=total, weights=weights,
                                          mw_rounds=mw_rounds, **post_opts)
-            self.stats.postprocess_calls += 1
+            self.stats.bump("postprocess_calls")
             if postprocess == "nonneg":
                 self._synth_tables = tables
         return tables, meas
@@ -203,7 +287,7 @@ class ReleaseServing:
                     "release(..., postprocess=\"nonneg\") first or pass "
                     "tables=")
         from repro.release import synthesize_records
-        self.stats.synthesize_calls += 1
+        self.stats.bump("synthesize_calls")
         return synthesize_records(self.plan.domain, tables, n_records, key,
                                   order=order, batch=batch)
 
@@ -261,23 +345,29 @@ class MarginalEngine(ReleaseServing, ChainRegistry):
             fused_chain_matvec(
                 factors, x, dims,
                 allow_narrow=self._chain_allow_narrow(key)).block_until_ready()
-            self.stats.compile_warmups += 1
+            self.stats.bump("compile_warmups")
 
     # ------------------------------------------------------------------ serve
     def measure(self, marginals: Mapping[Clique, jnp.ndarray],
                 key: jax.Array) -> Dict[Clique, Measurement]:
         """Algorithm 1 over the whole closure: one fused chain per signature."""
-        self.stats.measure_calls += 1
-        return measure(self.plan, marginals, key, use_kernel=self.use_kernel,
-                       batched=True, dtype=self.dtype)
+        self.stats.bump("measure_calls")
+        with TRACER.span("engine.measure").set(
+                engine="marginal", cliques=len(self.plan.cliques),
+                use_kernel=self.use_kernel):
+            return measure(self.plan, marginals, key,
+                           use_kernel=self.use_kernel, batched=True,
+                           dtype=self.dtype)
 
     def reconstruct(self, measurements: Mapping[Clique, Measurement],
                     cliques: Optional[Sequence[Clique]] = None
                     ) -> Dict[Clique, np.ndarray]:
         """Algorithm 2 for the workload (or ``cliques``): batched merged chains."""
-        self.stats.reconstruct_calls += 1
-        return reconstruct_all_batched(self.plan, measurements, cliques,
-                                       use_kernel=self.use_kernel)
+        self.stats.bump("reconstruct_calls")
+        with TRACER.span("engine.reconstruct").set(
+                engine="marginal", use_kernel=self.use_kernel):
+            return reconstruct_all_batched(self.plan, measurements, cliques,
+                                           use_kernel=self.use_kernel)
 
     # release()/synthesize() come from ReleaseServing (postprocess-aware).
 

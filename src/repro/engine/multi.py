@@ -35,6 +35,7 @@ from repro.core.kron import kron_matvec_batched
 from repro.core.mechanism import Measurement, noise_dtype
 from repro.core.residual import sub_matrix
 from repro.core.select import Plan
+from repro.obs import TRACER
 
 MultiItem = Tuple[Plan, Mapping[Clique, jnp.ndarray], jax.Array]
 
@@ -81,55 +82,68 @@ def measure_multi(items: Sequence[MultiItem], use_kernel: bool = False,
 
     out: List[Dict[Clique, Measurement]] = [dict() for _ in items]
     for dims, members in groups.items():
-        m = int(np.prod(dims)) if dims else 1
-        # Lane assembly happens HOST-SIDE in one numpy stack + ONE device
-        # transfer per group: a per-lane jnp.asarray/jnp.stack loop costs
-        # ~0.5 ms of eager dispatch per lane, which at hundreds of lanes per
-        # batch would swamp the launch savings the fusion exists to deliver.
-        vs, sig2s = [], []
-        for i, c, _k in members:
-            v = np.asarray(items[i][1][c]).reshape(-1)
-            if v.shape[0] != m:
-                raise ValueError(
-                    f"marginal for {c} (request {i}) has {v.shape[0]} cells, "
-                    f"want {m}")
-            vs.append(v)
-            sig2s.append(items[i][0].sigmas[c])
-        # Lane-count bucketing: pad g up to a power of two (min 8) so the
-        # chain shapes repeat across drains of different sizes — otherwise
-        # every new batch size pays a fresh per-shape XLA compile (~1 s for
-        # a 16-request drain) that dwarfs the launch savings.  Pad lanes are
-        # zero marginals with a recycled key; their outputs are sliced away,
-        # and row-independence of the batched contraction keeps the real
-        # lanes bit-identical to the unpadded launch (test-enforced).
-        g = len(members)
-        g_pad = 8
-        while g_pad < g:
-            g_pad *= 2
-        vnp = np.stack(vs)
-        if g_pad > g:
-            vnp = np.concatenate(
-                [vnp, np.zeros((g_pad - g, m), vnp.dtype)], axis=0)
-        vstack = jnp.asarray(vnp, dtype=dtype)                   # (g_pad, m)
-        keys_np = np.stack([k for _i, _c, k in members])
-        if g_pad > g:
-            keys_np = np.concatenate(
-                [keys_np, np.repeat(keys_np[:1], g_pad - g, axis=0)], axis=0)
-        z = jax.vmap(lambda k: jax.random.normal(k, (m,), dtype=dtype))(
-            jnp.asarray(keys_np))
-        sig = jnp.asarray(np.sqrt(np.asarray(sig2s))[:, None], dtype=dtype)
-        if not dims:
-            om = vstack[:g] + sig * z[:g]
-        else:
-            x = jnp.concatenate([vstack, z], axis=0)             # (2·g_pad, m)
-            factors = [sub_matrix(n) for n in dims]
-            if use_kernel:
-                from repro.kernels.kron_matvec.fused import fused_chain_matvec
-                y = fused_chain_matvec(factors, x, dims)
-            else:
-                y = kron_matvec_batched(factors, x, dims)
-            om = y[:g] + sig * y[g_pad:g_pad + g]
-        om_host = np.asarray(om)
+        with TRACER.span("measure.multi.group").set(
+                dims="x".join(map(str, dims)) if dims else "scalar",
+                lanes=len(members)):
+            om_host, sig2s = _measure_group(items, dims, members,
+                                            use_kernel, dtype)
         for j, (i, c, _k) in enumerate(members):
             out[i][c] = Measurement(c, om_host[j], sig2s[j])
     return out
+
+
+def _measure_group(items, dims, members, use_kernel, dtype):
+    """One signature group: assemble lanes, launch once, slice back.
+
+    Returns ``(om_host, sig2s)`` — the (g, m) noisy outputs on host and the
+    per-lane σ² list in member order.
+    """
+    m = int(np.prod(dims)) if dims else 1
+    # Lane assembly happens HOST-SIDE in one numpy stack + ONE device
+    # transfer per group: a per-lane jnp.asarray/jnp.stack loop costs
+    # ~0.5 ms of eager dispatch per lane, which at hundreds of lanes per
+    # batch would swamp the launch savings the fusion exists to deliver.
+    vs, sig2s = [], []
+    for i, c, _k in members:
+        v = np.asarray(items[i][1][c]).reshape(-1)
+        if v.shape[0] != m:
+            raise ValueError(
+                f"marginal for {c} (request {i}) has {v.shape[0]} cells, "
+                f"want {m}")
+        vs.append(v)
+        sig2s.append(items[i][0].sigmas[c])
+    # Lane-count bucketing: pad g up to a power of two (min 8) so the
+    # chain shapes repeat across drains of different sizes — otherwise
+    # every new batch size pays a fresh per-shape XLA compile (~1 s for
+    # a 16-request drain) that dwarfs the launch savings.  Pad lanes are
+    # zero marginals with a recycled key; their outputs are sliced away,
+    # and row-independence of the batched contraction keeps the real
+    # lanes bit-identical to the unpadded launch (test-enforced).
+    g = len(members)
+    g_pad = 8
+    while g_pad < g:
+        g_pad *= 2
+    vnp = np.stack(vs)
+    if g_pad > g:
+        vnp = np.concatenate(
+            [vnp, np.zeros((g_pad - g, m), vnp.dtype)], axis=0)
+    vstack = jnp.asarray(vnp, dtype=dtype)                   # (g_pad, m)
+    keys_np = np.stack([k for _i, _c, k in members])
+    if g_pad > g:
+        keys_np = np.concatenate(
+            [keys_np, np.repeat(keys_np[:1], g_pad - g, axis=0)], axis=0)
+    z = jax.vmap(lambda k: jax.random.normal(k, (m,), dtype=dtype))(
+        jnp.asarray(keys_np))
+    sig = jnp.asarray(np.sqrt(np.asarray(sig2s))[:, None], dtype=dtype)
+    if not dims:
+        om = vstack[:g] + sig * z[:g]
+    else:
+        x = jnp.concatenate([vstack, z], axis=0)             # (2·g_pad, m)
+        factors = [sub_matrix(n) for n in dims]
+        if use_kernel:
+            from repro.kernels.kron_matvec.fused import fused_chain_matvec
+            y = fused_chain_matvec(factors, x, dims)
+        else:
+            y = kron_matvec_batched(factors, x, dims)
+        om = y[:g] + sig * y[g_pad:g_pad + g]
+    return np.asarray(om), sig2s

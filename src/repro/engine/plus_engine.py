@@ -60,6 +60,7 @@ from repro.engine.engine import ChainRegistry, EngineStats, ReleaseServing
 from repro.kernels.kron_matvec._layout import interpret_default
 from repro.kernels.kron_matvec.fused import apply_epilogue, fused_chain_matvec
 from repro.kernels.kron_matvec.stats import CHAIN_STATS
+from repro.obs import TRACER
 
 
 def expand_range_axis(t: jnp.ndarray, axis: int, n: int) -> jnp.ndarray:
@@ -234,7 +235,7 @@ class PlusEngine(ReleaseServing, ChainRegistry):
                     factors, x, dims, epilogue=epi,
                     allow_narrow=self._chain_allow_narrow(key)
                 ).block_until_ready()
-                self.stats.compile_warmups += 1
+                self.stats.bump("compile_warmups")
         for tok in self._measure_groups:
             if not tok:
                 continue
@@ -243,7 +244,7 @@ class PlusEngine(ReleaseServing, ChainRegistry):
             if not self.use_kernel:
                 s["combine"](jnp.zeros((s["g"], s["m"]), jnp.float32),
                              jnp.zeros((s["g"], s["mz"]), self.dtype))
-                self.stats.compile_warmups += 1
+                self.stats.bump("compile_warmups")
         for tok, cliques in self._reconstruct_groups.items():
             if not tok:
                 continue
@@ -255,7 +256,7 @@ class PlusEngine(ReleaseServing, ChainRegistry):
             else:
                 s["full"](jnp.zeros((g, int(np.prod(s["in_dims"]))),
                                     jnp.float32))
-                self.stats.compile_warmups += 1
+                self.stats.bump("compile_warmups")
 
     # ---------------------------------------------------------------- noise
     def _fold_keys(self, key: jax.Array) -> jax.Array:
@@ -299,7 +300,13 @@ class PlusEngine(ReleaseServing, ChainRegistry):
         ``marginals[A]`` must hold the exact marginal table for every A in
         the plan's closure (flattened or tensor shaped).
         """
-        self.stats.measure_calls += 1
+        self.stats.bump("measure_calls")
+        with TRACER.span("engine.measure").set(
+                engine="plus", cliques=len(self.plan.cliques),
+                use_kernel=self.use_kernel):
+            return self._measure_impl(marginals, key)
+
+    def _measure_impl(self, marginals, key):
         all_keys = self._fold_keys(key)
         out: Dict[Clique, Measurement] = {}
         for tok, cliques in self._measure_groups.items():
@@ -368,7 +375,12 @@ class PlusEngine(ReleaseServing, ChainRegistry):
                     ) -> Dict[Clique, np.ndarray]:
         """Algorithm 6 for the workload (or ``cliques``): one merged chain
         per signature group, with prefix/range W_i applied implicitly."""
-        self.stats.reconstruct_calls += 1
+        self.stats.bump("reconstruct_calls")
+        with TRACER.span("engine.reconstruct").set(
+                engine="plus", use_kernel=self.use_kernel):
+            return self._reconstruct_impl(measurements, cliques)
+
+    def _reconstruct_impl(self, measurements, cliques=None):
         specs = self._ensure_reconstruct_state()
         if cliques is None:
             groups = self._reconstruct_groups
@@ -393,8 +405,8 @@ class PlusEngine(ReleaseServing, ChainRegistry):
                                           + tuple(s["chain_out"])))
             else:
                 y = s["full"](jnp.asarray(x, jnp.float32))
-                CHAIN_STATS.epilogue_axes += sum(1 for op in s["epilogue"]
-                                                 if op)
+                CHAIN_STATS.inc("epilogue_axes",
+                                sum(1 for op in s["epilogue"] if op))
             y = np.asarray(y)
             for i, c in enumerate(group):
                 out[c] = y[i]

@@ -31,6 +31,14 @@ from jax.experimental.shard_map import shard_map
 from repro.core.domain import Clique, Domain
 from repro.core.mechanism import Measurement, noise_dtype
 from repro.core.plantable import BasePlan
+from repro.obs import REGISTRY
+
+# Process-wide engine-cache event feed for /metrics (per-cache ints stay on
+# each _EngineCache instance; this family aggregates across caches).
+_CACHE_EVENTS = REGISTRY.counter(
+    "repro_engine_cache_events_total",
+    "Engine-cache events (hit, miss, eviction, forced_eviction)",
+    labels=("event",))
 
 
 def _env_cache_size(default: int = 16) -> int:
@@ -109,6 +117,7 @@ class _EngineCache:
         ent = self._entries.get(key)
         if ent is None:
             self.misses += 1
+            _CACHE_EVENTS.labels(event="miss").inc()
             return None
         ref, child_refs, engine = ent
         stale = ref() is not plan      # id recycled: stale entry
@@ -120,12 +129,14 @@ class _EngineCache:
             del self._entries[key]
             self._pinned.discard(key)
             self.misses += 1
+            _CACHE_EVENTS.labels(event="miss").inc()
             return None
         self._entries.move_to_end(key)
         self.hits += 1
+        _CACHE_EVENTS.labels(event="hit").inc()
         stats = getattr(engine, "stats", None)
         if stats is not None:          # cache values are engines in serving;
-            stats.cache_hits += 1      # tests may stash sentinels
+            stats.bump("cache_hits")   # tests may stash sentinels
         return engine
 
     def put(self, plan, use_kernel: bool, dtype, engine,
@@ -147,6 +158,7 @@ class _EngineCache:
         candidates = [k for k in self._entries if k not in self._pinned]
         if not candidates:                          # everything pinned
             self.forced_evictions += 1
+            _CACHE_EVENTS.labels(event="forced_eviction").inc()
             victim = next(iter(self._entries))      # oldest = LRU
         elif self.evict_score is not None:
             victim = min(candidates, key=lambda k: (
@@ -156,6 +168,7 @@ class _EngineCache:
         del self._entries[victim]
         self._pinned.discard(victim)
         self.evictions += 1
+        _CACHE_EVENTS.labels(event="eviction").inc()
 
     # ---------------------------------------------------------- warm pool
     def pin(self, plan, use_kernel: bool, dtype, secure: bool = False,
@@ -203,7 +216,7 @@ def _engine_for(plan: BasePlan, use_kernel: bool, dtype,
     if eng is None:
         eng = plan.engine(use_kernel=use_kernel, precompile=False, dtype=dtype,
                           secure=secure, digits=digits)
-        eng.stats.cache_misses += 1
+        eng.stats.bump("cache_misses")
         _ENGINE_CACHE.put(plan, use_kernel, dtype, eng, secure, digits)
     return eng
 

@@ -36,6 +36,7 @@ Validated in interpret mode on CPU against the float64 numpy oracle
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass
 from functools import lru_cache
 from typing import List, Optional, Sequence, Tuple
@@ -46,10 +47,23 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.obs import REGISTRY, TRACER
+from repro.obs.naming import chain_label
+
 from ._layout import interpret_default as _interpret_default
 from ._layout import normalize_factor as _normalize_factor
 from ._layout import pad_to as _pad_to
 from .stats import CHAIN_STATS
+
+# Measured dispatch time per chain launch, labeled like the roofline gauges
+# (obs/naming.py) so predicted-vs-measured is one /metrics join.  Host-side
+# dispatch timing: JAX execution is async, so this bounds launch overhead and
+# any synchronous work, not device busy time.
+_LAUNCH_SECONDS = REGISTRY.histogram(
+    "repro_kernel_launch_seconds",
+    "Host-side dispatch time of one kron-chain launch",
+    labels=("chain",),
+    buckets=(1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 0.1, 0.3, 1.0))
 
 _LANE = 128          # minor-axis (lane) padding quantum
 _SUB = 8             # sublane padding quantum (float32)
@@ -347,28 +361,44 @@ def fused_chain_matvec(factors: Sequence, x, dims: Sequence[int],
         return x[0] if flat_in else x
     if not live:
         y = apply_epilogue(x, plan.out_dims, plan.epilogue)
-        CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
-        return y[0] if flat_in else y
-    if force_fallback or not plan.fused_ok:
-        CHAIN_STATS.fallback_chains += 1
-        y = _fallback_per_axis(s_facs, x, plan.in_dims, interpret)
-        y = apply_epilogue(y, plan.out_dims, plan.epilogue)
-        CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
+        CHAIN_STATS.inc("epilogue_axes", sum(1 for op in plan.epilogue if op))
         return y[0] if flat_in else y
 
-    cd = jnp.dtype(plan.compute_dtype)
-    b_p = _pad_to(b, plan.block_l)
-    # ONE pad: batch to the sublane grid, flat width to the lane grid; the
-    # tile narrows to the compute dtype here so VMEM sees the planned bytes.
-    x_p = jnp.zeros((b_p, plan.w_in), cd).at[:b, :plan.n_in].set(
-        x.astype(cd))
-    CHAIN_STATS.pads += 1
-    call, _ = _build_fused_call(plan.signature, b_p, interpret)
-    out = call(*[jnp.asarray(s, cd) for s in live], x_p)
-    CHAIN_STATS.pallas_calls += 1
-    CHAIN_STATS.fused_chains += 1
-    CHAIN_STATS.epilogue_axes += sum(1 for op in plan.epilogue if op)
-    # ONE slice back to the true (B, n_out) extent.
-    y = out[:b, :plan.n_out]
-    CHAIN_STATS.slices += 1
+    tune_source = "explicit" if explicit else \
+        (cfg.source if cfg is not None else "default")
+    label = chain_label(plan.in_dims, b, plan.compute_dtype)
+    t0 = time.monotonic()
+    if force_fallback or not plan.fused_ok:
+        CHAIN_STATS.inc("fallback_chains")
+        with TRACER.span("kernel.chain").set(
+                chain=label, fused=False, block_l=plan.block_l,
+                compute_dtype=plan.compute_dtype, tune_source=tune_source):
+            y = _fallback_per_axis(s_facs, x, plan.in_dims, interpret)
+            y = apply_epilogue(y, plan.out_dims, plan.epilogue)
+        CHAIN_STATS.inc("epilogue_axes", sum(1 for op in plan.epilogue if op))
+        _LAUNCH_SECONDS.labels(chain=label).observe(time.monotonic() - t0)
+        return y[0] if flat_in else y
+
+    with TRACER.span("kernel.chain").set(
+            chain=label, fused=True, block_l=plan.block_l,
+            compute_dtype=plan.compute_dtype, tune_source=tune_source,
+            vmem_bytes=plan.vmem_bytes):
+        cd = jnp.dtype(plan.compute_dtype)
+        b_p = _pad_to(b, plan.block_l)
+        # ONE pad: batch to the sublane grid, flat width to the lane grid;
+        # the tile narrows to the compute dtype here so VMEM sees the planned
+        # bytes.
+        x_p = jnp.zeros((b_p, plan.w_in), cd).at[:b, :plan.n_in].set(
+            x.astype(cd))
+        CHAIN_STATS.inc("pads")
+        call, _ = _build_fused_call(plan.signature, b_p, interpret)
+        out = call(*[jnp.asarray(s, cd) for s in live], x_p)
+        CHAIN_STATS.inc("pallas_calls")
+        CHAIN_STATS.inc("fused_chains")
+        CHAIN_STATS.inc("epilogue_axes",
+                        sum(1 for op in plan.epilogue if op))
+        # ONE slice back to the true (B, n_out) extent.
+        y = out[:b, :plan.n_out]
+        CHAIN_STATS.inc("slices")
+    _LAUNCH_SECONDS.labels(chain=label).observe(time.monotonic() - t0)
     return y[0] if flat_in else y

@@ -44,14 +44,14 @@ def _apply_axis(s: np.ndarray, x: jnp.ndarray, L: int, n: int, R: int,
     s_p = jnp.zeros((m_p, n_p), x.dtype).at[:m, :n].set(jnp.asarray(s, x.dtype))
     xr = x.reshape(L, n, R)
     x_p = jnp.zeros((L_p, n_p, R_p), x.dtype).at[:L, :n, :R].set(xr)
-    CHAIN_STATS.pads += 1
+    CHAIN_STATS.inc("pads")
     block_l = min(_SUB, L_p)
     block_r = min(_LANE, R_p)
     y = kron_axis_matvec(s_p, x_p, block_l=block_l, block_r=block_r,
                          interpret=interpret)
-    CHAIN_STATS.pallas_calls += 1
+    CHAIN_STATS.inc("pallas_calls")
     out = y[:L, :m, :R].reshape(L * m * R)
-    CHAIN_STATS.slices += 1
+    CHAIN_STATS.inc("slices")
     return out
 
 

@@ -6,39 +6,87 @@ an array is zero-padded into a kernel layout, sliced back out of one, or a
 the layout contract of docs/DESIGN.md §3.4 — the fused chain performs exactly
 one pad and one slice per chain, while the per-axis fallback pays one of each
 per non-trivial factor.
+
+Since the obs subsystem (docs/OBSERVABILITY.md) the store is two-tier:
+
+* Each :class:`ChainStats` instance holds resettable
+  :class:`~repro.obs.AtomicCounter` cells — ``reset_chain_stats()`` /
+  ``chain_stats()`` keep their historical window semantics for tests and
+  benchmarks, and bumps from concurrent serve workers no longer race.
+* Every :meth:`ChainStats.inc` on the global :data:`CHAIN_STATS` also feeds
+  the monotone ``repro_kernel_events_total{event=...}`` family in the global
+  metrics registry, which is what ``/metrics`` exposes (Prometheus counters
+  must never go backwards, so the resettable window stays local).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.obs import REGISTRY, AtomicCounter
+
+_FIELDS = (
+    "pads",             # HBM zero-pad materializations
+    "slices",           # HBM slice-backs
+    "pallas_calls",     # pallas_call invocations
+    "fused_chains",     # chains served by the fused kernel
+    "fallback_chains",  # chains that fell back to the per-axis kernel
+    "epilogue_axes",    # implicit-W (cumsum) epilogue axes applied
+)
+
+_KERNEL_EVENTS = REGISTRY.counter(
+    "repro_kernel_events_total",
+    "Kron-chain kernel events (pads, slices, pallas calls, path choices)",
+    labels=("event",))
 
 
-@dataclass
 class ChainStats:
-    pads: int = 0            # HBM zero-pad materializations
-    slices: int = 0          # HBM slice-backs
-    pallas_calls: int = 0    # pallas_call invocations
-    fused_chains: int = 0    # chains served by the fused kernel
-    fallback_chains: int = 0  # chains that fell back to the per-axis kernel
-    epilogue_axes: int = 0   # implicit-W (cumsum) epilogue axes applied
+    """Atomic kernel-event counters with a resettable window.
 
-    def snapshot(self) -> dict:
-        return dict(pads=self.pads, slices=self.slices,
-                    pallas_calls=self.pallas_calls,
-                    fused_chains=self.fused_chains,
-                    fallback_chains=self.fallback_chains,
-                    epilogue_axes=self.epilogue_axes)
+    ``mirror=True`` (the process-global :data:`CHAIN_STATS`) forwards every
+    increment to the registry's monotone family; ad-hoc instances (tests)
+    stay local.
+    """
+
+    __slots__ = ("_cells", "_mirror")
+
+    def __init__(self, mirror: bool = False):
+        self._cells = {f: AtomicCounter() for f in _FIELDS}
+        self._mirror = mirror
+
+    def inc(self, name: str, n: int = 1) -> None:
+        if n:
+            self._cells[name].inc(n)
+            if self._mirror:
+                _KERNEL_EVENTS.labels(event=name).inc(n)
+
+    def reset(self) -> None:
+        for c in self._cells.values():
+            c.set(0)
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f: int(self._cells[f].value) for f in _FIELDS}
 
 
-CHAIN_STATS = ChainStats()
+def _chain_field(name: str) -> property:
+    def _get(self) -> int:
+        return int(self._cells[name].value)
+
+    def _set(self, v: int) -> None:
+        self._cells[name].set(v)
+
+    return property(_get, _set)
+
+
+for _f in _FIELDS:
+    setattr(ChainStats, _f, _chain_field(_f))
+del _f
+
+
+CHAIN_STATS = ChainStats(mirror=True)
 
 
 def reset_chain_stats() -> None:
-    CHAIN_STATS.pads = 0
-    CHAIN_STATS.slices = 0
-    CHAIN_STATS.pallas_calls = 0
-    CHAIN_STATS.fused_chains = 0
-    CHAIN_STATS.fallback_chains = 0
-    CHAIN_STATS.epilogue_axes = 0
+    CHAIN_STATS.reset()
 
 
 def chain_stats() -> dict:

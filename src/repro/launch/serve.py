@@ -14,6 +14,10 @@ Run (demo traffic, then keep serving /stats until interrupted)::
         --ledger /tmp/ledger.jsonl --port 8787
 
 ``--once`` exits after the demo traffic instead of serving forever.
+``--trace PATH`` turns on request tracing (docs/OBSERVABILITY.md) and
+appends the span tree of every served request to PATH as JSONL — render it
+with ``python tools/repro_trace.py PATH``.  The HTTP listener also serves
+Prometheus ``/metrics`` and a liveness-aware ``/healthz``.
 """
 from __future__ import annotations
 
@@ -24,6 +28,7 @@ import time
 from repro.core import all_kway, select
 from repro.data.tabular import (adult_domain, marginals_from_records,
                                 synthetic_records)
+from repro.obs import TRACER
 from repro.serve import (BudgetLedger, ReleaseRequest, ReleaseServer,
                          start_stats_http)
 
@@ -83,21 +88,30 @@ def main() -> None:
                     help="stats HTTP port (0 = ephemeral)")
     ap.add_argument("--once", action="store_true",
                     help="exit after the demo traffic (no serve-forever)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="append request span trees to PATH as JSONL "
+                         "(render with tools/repro_trace.py)")
     args = ap.parse_args()
 
+    if args.trace:
+        TRACER.enable(args.trace)
     server = build_server(args.ledger, args.tenants, rho=args.rho,
                           max_batch=args.max_batch)
     httpd, port = start_stats_http(server, port=args.port)
     print(f"[serve] {args.tenants} tenants registered; "
           f"ledger={args.ledger} (replayed "
           f"{server.ledger.replayed_records} records); "
-          f"stats on http://127.0.0.1:{port}/stats")
+          f"stats on http://127.0.0.1:{port}/stats, "
+          f"metrics on /metrics"
+          + (f"; tracing to {args.trace}" if args.trace else ""))
     summary = demo_traffic(server, args.requests)
     print(f"[serve] demo traffic: {json.dumps(summary)}")
     print("[serve] ledger:", json.dumps(server.ledger.report(), default=str))
     if args.once:
         httpd.shutdown()
         server.stop()
+        if args.trace:
+            TRACER.flush()
         return
     print("[serve] serving /stats until interrupted (ctrl-C)")
     try:

@@ -1,0 +1,29 @@
+"""Observability: metrics registry + request-scoped tracing.
+
+This package is a *leaf* — it imports only the standard library — so every
+other layer (serve, engine, kernels, release) can depend on it without
+cycles.  See docs/OBSERVABILITY.md for the span model, metric naming, and
+the trace CLI walkthrough.
+"""
+from .metrics import (
+    REGISTRY,
+    AtomicCounter,
+    MetricFamily,
+    MetricsRegistry,
+    exposition,
+    parse_exposition,
+)
+from .trace import NOOP_SPAN, TRACER, Span, Tracer
+
+__all__ = [
+    "AtomicCounter",
+    "MetricFamily",
+    "MetricsRegistry",
+    "REGISTRY",
+    "exposition",
+    "parse_exposition",
+    "Span",
+    "Tracer",
+    "TRACER",
+    "NOOP_SPAN",
+]

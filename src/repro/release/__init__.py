@@ -60,15 +60,21 @@ def postprocess_release(plan: BasePlan, tables: Mapping[Clique, np.ndarray],
     simplex (and runs ``mw_rounds`` of MW refinement).  ``total`` pins the
     family's common total — the secure path passes the measured integer.
     """
+    from repro.obs import TRACER
     if mode == "consistent":
-        cons = solve_consistency(plan, tables, weights=weights,
-                                 fix_total=total, tol=tol, maxiter=maxiter,
-                                 backend=backend)
-        return cons.marginals()
+        with TRACER.span("release.postprocess").set(mode=mode,
+                                                    tables=len(tables)):
+            cons = solve_consistency(plan, tables, weights=weights,
+                                     fix_total=total, tol=tol,
+                                     maxiter=maxiter, backend=backend)
+            return cons.marginals()
     if mode == "nonneg":
-        return nonneg_release(plan, tables, total=total, weights=weights,
-                              mw_rounds=mw_rounds, tol=tol, maxiter=maxiter,
-                              backend=backend)
+        with TRACER.span("release.postprocess").set(mode=mode,
+                                                    tables=len(tables),
+                                                    mw_rounds=mw_rounds):
+            return nonneg_release(plan, tables, total=total, weights=weights,
+                                  mw_rounds=mw_rounds, tol=tol,
+                                  maxiter=maxiter, backend=backend)
     raise ValueError(f"postprocess mode must be one of {POSTPROCESS_MODES}, "
                      f"got {mode!r}")
 

@@ -72,6 +72,7 @@ class BudgetLedger:
         self._budgets: Dict[str, PrivacyBudget] = {}
         self._charges: Dict[str, int] = {}          # per-tenant charge count
         self._failed = False
+        self._metrics = None         # bound via bind_registry (obs subsystem)
         self._replayed = self._replay()
         # Unbuffered binary append: tell() is a byte offset and a failed
         # write leaves no hidden buffered tail, so _append can roll a
@@ -161,6 +162,44 @@ class BudgetLedger:
                 self._failed = True
             raise
 
+    # ------------------------------------------------------------- metrics
+    def bind_registry(self, registry) -> None:
+        """Mirror charge/reject events + spend levels into ``registry``.
+
+        Called by the owning :class:`~repro.serve.server.ReleaseServer`; a
+        standalone ledger stays metrics-free.  Only successful *journal*
+        outcomes are mirrored — the gauges show the same numbers
+        :meth:`report` does, because both read the same budgets.
+        """
+        self._metrics = {
+            "charges": registry.counter(
+                "repro_ledger_charges_total",
+                "Durably journaled budget charges", labels=("tenant",)),
+            "rejects": registry.counter(
+                "repro_ledger_rejects_total",
+                "Charges rejected as over-budget", labels=("tenant",)),
+            "spent": registry.gauge(
+                "repro_ledger_pcost_spent",
+                "Journaled pcost spent", labels=("tenant",)),
+            "total": registry.gauge(
+                "repro_ledger_pcost_total",
+                "Registered pcost budget", labels=("tenant",)),
+        }
+        with self._lock:
+            for t, b in self._budgets.items():   # replayed state, up front
+                self._metrics["spent"].labels(tenant=t).set(b.spent)
+                self._metrics["total"].labels(tenant=t).set(b.total_pcost)
+
+    def _mirror(self, kind: str, tenant: str, budget=None) -> None:
+        m = self._metrics
+        if m is None:
+            return
+        if kind in ("charges", "rejects"):
+            m[kind].labels(tenant=tenant).inc()
+        if budget is not None:
+            m["spent"].labels(tenant=tenant).set(budget.spent)
+            m["total"].labels(tenant=tenant).set(budget.total_pcost)
+
     # -------------------------------------------------------------- public
     @property
     def tenants(self):
@@ -189,10 +228,11 @@ class BudgetLedger:
                           "pcost_total": total, "ts": time.time()})
             b = self._budgets.get(tenant)
             if b is None:
-                self._budgets[tenant] = PrivacyBudget(total)
+                b = self._budgets[tenant] = PrivacyBudget(total)
                 self._charges[tenant] = 0
             else:
                 b.total_pcost = total
+            self._mirror("register", tenant, b)
 
     def charge(self, tenant: str, pcost: float,
                request_id: Optional[str] = None) -> None:
@@ -211,11 +251,13 @@ class BudgetLedger:
             if b is None:
                 raise UnknownTenant(tenant)
             if not b.can_charge(pcost):
+                self._mirror("rejects", tenant)
                 raise BudgetExhausted(pcost, b.remaining, tenant)
             self._append({"op": "charge", "tenant": tenant, "pcost": pcost,
                           "request_id": request_id, "ts": time.time()})
             b.spent += pcost             # after the durable append, never before
             self._charges[tenant] += 1
+            self._mirror("charges", tenant, b)
 
     def remaining(self, tenant: str) -> float:
         b = self._budgets.get(tenant)

@@ -50,7 +50,7 @@ class EnginePool:
             if eng is None:
                 eng = plan.engine(use_kernel=use_kernel, precompile=False,
                                   dtype=dtype, secure=secure, digits=digits)
-                eng.stats.cache_misses += 1
+                eng.stats.bump("cache_misses")
                 self.cache.put(plan, use_kernel, dtype, eng, secure, digits)
             key = self.cache._key(plan, use_kernel, dtype, secure, digits)
             self._uses[key][tenant] += 1

@@ -27,6 +27,7 @@ batched/sequential bit-exactness).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import queue
 import threading
@@ -44,6 +45,7 @@ from repro.core.accountant import BudgetExhausted
 from repro.core.domain import Clique
 from repro.core.mechanism import noise_dtype, pcost_of_plan
 from repro.engine.multi import can_fuse, measure_multi
+from repro.obs import REGISTRY, TRACER, exposition
 from repro.serve.ledger import BudgetLedger, UnknownTenant
 from repro.serve.pool import EnginePool
 from repro.serve.stats import ServerStats
@@ -105,6 +107,7 @@ class _Pending:
     measurements: Optional[dict] = None
     batched: bool = False
     charged: float = 0.0
+    trace: Optional[object] = None   # root serve.request span (tracing on)
 
 
 class ReleaseServer:
@@ -136,6 +139,12 @@ class ReleaseServer:
         self.dtype = noise_dtype() if dtype is None else dtype
         self.pool = EnginePool() if pool is None else pool
         self.stats = ServerStats()
+        # The server-private metrics registry (tenant-scoped series); the
+        # ledger mirrors its charge/reject/spend series into the same store
+        # so /metrics and /ledger can never disagree.
+        self.metrics = self.stats.registry
+        self.ledger.bind_registry(self.metrics)
+        self._started_at: Optional[float] = None
         self._base_key = jax.random.PRNGKey(noise_seed)
         self._sessions: Dict[str, _TenantSession] = {}  # guarded-by: _sessions_lock
         self._sessions_lock = threading.Lock()
@@ -151,6 +160,8 @@ class ReleaseServer:
     def start(self) -> "ReleaseServer":
         if self._worker is None or not self._worker.is_alive():
             self._stop_evt.clear()
+            if self._started_at is None:
+                self._started_at = time.monotonic()
             self._worker = threading.Thread(target=self._worker_loop,
                                             name="release-server-worker",
                                             daemon=True)
@@ -226,8 +237,15 @@ class ReleaseServer:
         with self._counter_lock:
             idx = self._counter
             self._counter += 1
+        trace = None
+        if TRACER.enabled:
+            # Root span of the request's trace tree: minted here, carried on
+            # the queued item, ended by the worker when the future resolves.
+            trace = TRACER.span("serve.request").set(
+                tenant=request.tenant, kind=request.kind, index=idx)
         self.stats.enqueue()
-        self._queue.put(_Pending(request, fut, time.monotonic(), idx))
+        self._queue.put(_Pending(request, fut, time.monotonic(), idx,
+                                 trace=trace))
         return fut
 
     def request_sync(self, request: ReleaseRequest,
@@ -243,6 +261,26 @@ class ReleaseServer:
         d["kernels"] = chain_stats()
         d["autotune"] = registry_snapshot()
         return d
+
+    def health(self) -> dict:
+        """Liveness snapshot for /healthz: worker state, queue depth, uptime.
+
+        ``ok`` is False exactly when the worker thread is not alive — the
+        same condition under which :meth:`submit` refuses new requests — so
+        a load balancer polling /healthz stops routing before clients see
+        the RuntimeError.
+        """
+        alive = self._worker is not None and self._worker.is_alive()
+        uptime = (time.monotonic() - self._started_at
+                  if self._started_at is not None else 0.0)
+        return {"ok": alive, "worker_alive": alive,
+                "queue_depth": self.stats.queue_depth,
+                "uptime_s": uptime, "tenants": list(self.tenants())}
+
+    def metrics_text(self) -> str:
+        """Prometheus exposition: server registry merged with the global one
+        (kernel events, engine aggregates, launch timings)."""
+        return exposition(self.metrics, REGISTRY)
 
     # -------------------------------------------------------------- worker
     def _worker_loop(self) -> None:
@@ -289,12 +327,12 @@ class ReleaseServer:
     def _fail(self, p: _Pending, exc: Exception) -> None:
         if p.future.done():            # already resolved (or failed) earlier
             return
-        ts = self.stats.tenant(p.request.tenant)
-        ts.requests += 1
-        if isinstance(exc, BudgetExhausted):
-            ts.rejected_budget += 1
-        else:
-            ts.failed += 1
+        outcome = ("rejected_budget" if isinstance(exc, BudgetExhausted)
+                   else "failed")
+        self.stats.tenant(p.request.tenant).record(outcome)
+        if p.trace:
+            p.trace.set(outcome=outcome, error=type(exc).__name__)
+            p.trace.end()
         p.future.set_exception(exc)
 
     @staticmethod
@@ -320,6 +358,16 @@ class ReleaseServer:
                     f"(nothing charged)")
 
     def _serve_batch(self, batch) -> None:
+        # Queue wait: an interval that started on the submitting thread —
+        # recorded with an explicit t0 against each request's own trace.
+        if TRACER.enabled:
+            t_drain = time.monotonic()
+            for p in batch:
+                if p.trace:
+                    TRACER.span("serve.queue_wait", parent=p.trace,
+                                t0=p.t_submit).set(
+                        batch_size=len(batch)).end(t_drain)
+
         # ---- phase 1: validate, then charge-before-measure ---------------
         charged: list = []
         for p in batch:
@@ -340,8 +388,10 @@ class ReleaseServer:
                             "registered a plain marginal plan")
                     self._validate_marginals(sess, req)
                     p.charged = sess.pcost_per_release
-                    self.ledger.charge(req.tenant, p.charged,
-                                       request_id=f"req-{p.index}")
+                    with TRACER.span("serve.charge", parent=p.trace).set(
+                            tenant=req.tenant, pcost=p.charged):
+                        self.ledger.charge(req.tenant, p.charged,
+                                           request_id=f"req-{p.index}")
                 elif req.kind == "synthesis":
                     if sess.synth_tables is None:
                         raise ValueError(
@@ -362,9 +412,23 @@ class ReleaseServer:
         if len(fusable) >= 2:
             items = [(p.session.plan, p.request.marginals, self._key_for(p))
                      for p in fusable]
+            # The fused launch serves every fusable request at once, but a
+            # span tree needs ONE parent: the batch leader's trace hosts the
+            # real serve.fuse span (kernel/group spans nest under it); every
+            # other request gets a same-interval serve.fuse marker pointing
+            # at the leader's trace, so its tree stays connected and its
+            # critical path still accounts the fused time.
+            leader = fusable[0]
+            t_fuse0 = time.monotonic()
+            fuse_ctx = (TRACER.activate(leader.trace) if leader.trace
+                        else contextlib.nullcontext())
             try:
-                measured = measure_multi(items, use_kernel=self.use_kernel,
-                                         dtype=self.dtype)
+                with fuse_ctx, TRACER.span(
+                        "serve.fuse", parent=leader.trace).set(
+                        requests=len(fusable)):
+                    measured = measure_multi(items,
+                                             use_kernel=self.use_kernel,
+                                             dtype=self.dtype)
             except Exception:          # noqa: BLE001 — fused path is optional
                 # Phase-1 validation makes this unreachable for bad request
                 # payloads, but an unexpected fused-path failure must not
@@ -373,6 +437,7 @@ class ReleaseServer:
                 # fails alone in phase 3 and the rest of the batch serves.
                 pass
             else:
+                t_fuse1 = time.monotonic()
                 sigs = set()
                 for plan, _m, _k in items:
                     for c in plan.cliques:
@@ -382,29 +447,42 @@ class ReleaseServer:
                 for p, meas in zip(fusable, measured):
                     p.measurements = meas
                     p.batched = True
+                    if p.trace and p is not leader:
+                        TRACER.span("serve.fuse", parent=p.trace,
+                                    t0=t_fuse0).set(
+                            shared=True, requests=len(fusable),
+                            launch_trace=leader.trace.trace_id
+                            if leader.trace else None).end(t_fuse1)
         self.stats.record_batch(len(batch), fused_groups)
 
         # ---- phase 3: per-request serve ----------------------------------
         for p in charged:
+            ctx = (TRACER.activate(p.trace) if p.trace
+                   else contextlib.nullcontext())
             try:
-                result = self._serve_one(p, len(batch))
+                with ctx:
+                    result = self._serve_one(p, len(batch))
             except Exception as exc:         # noqa: BLE001 — fail THIS request
                 self._fail(p, exc)
             else:
-                ts = self.stats.tenant(p.request.tenant)
-                ts.requests += 1
-                ts.completed += 1
-                if p.batched:
-                    ts.batched_requests += 1
-                ts.record_latency(result.latency_s)
+                self.stats.tenant(p.request.tenant).record(
+                    "completed", batched=p.batched,
+                    latency_s=result.latency_s)
+                if p.trace:
+                    p.trace.set(outcome="completed", batched=p.batched,
+                                batch_size=len(batch))
+                    p.trace.end()
                 p.future.set_result(result)
 
     def _serve_one(self, p: _Pending, batch_size: int) -> ReleaseResult:
         req, sess = p.request, p.session
         if req.kind == "synthesis":
             from repro.release import synthesize_records
-            records = synthesize_records(sess.plan.domain, sess.synth_tables,
-                                         req.n_records, self._key_for(p))
+            with TRACER.span("serve.synthesize").set(
+                    tenant=req.tenant, n_records=req.n_records):
+                records = synthesize_records(sess.plan.domain,
+                                             sess.synth_tables,
+                                             req.n_records, self._key_for(p))
             return ReleaseResult(req.tenant, req.kind, records=records,
                                  batch_size=batch_size,
                                  latency_s=time.monotonic() - p.t_submit)
@@ -421,7 +499,7 @@ class ReleaseServer:
             tables = postprocess_release(
                 sess.plan, tables, req.postprocess,
                 total=engine._postprocess_total(meas))
-            engine.stats.postprocess_calls += 1
+            engine.stats.bump("postprocess_calls")
             if req.postprocess == "nonneg":
                 sess.synth_tables = tables
         return ReleaseResult(req.tenant, req.kind, tables=tables,
@@ -440,18 +518,26 @@ class _StatsHandler(BaseHTTPRequestHandler):
     def do_GET(self) -> None:               # noqa: N802 (stdlib API name)
         srv = self.server_ref
         path = self.path.split("?", 1)[0].rstrip("/") or "/"
+        status = 200
+        ctype = "application/json"
         if path == "/stats":
             body = json.dumps(srv.stats_dict(), indent=2, default=str)
         elif path == "/ledger":
             body = json.dumps(srv.ledger.report(), indent=2, default=str)
+        elif path == "/metrics":
+            body = srv.metrics_text()
+            ctype = "text/plain; version=0.0.4; charset=utf-8"
         elif path in ("/", "/healthz"):
-            body = json.dumps({"ok": True, "tenants": list(srv.tenants())})
+            health = srv.health()
+            body = json.dumps(health)
+            if not health["ok"]:      # dead worker: stop routing traffic here
+                status = 503
         else:
             self.send_error(404)
             return
         data = body.encode()
-        self.send_response(200)
-        self.send_header("Content-Type", "application/json")
+        self.send_response(status)
+        self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(data)))
         self.end_headers()
         self.wfile.write(data)
@@ -459,10 +545,13 @@ class _StatsHandler(BaseHTTPRequestHandler):
 
 def start_stats_http(server: ReleaseServer, host: str = "127.0.0.1",
                      port: int = 0):
-    """Serve ``/stats``, ``/ledger``, ``/healthz`` for ``server``.
+    """Serve ``/stats``, ``/ledger``, ``/healthz``, ``/metrics`` for
+    ``server``.
 
-    Returns ``(httpd, bound_port)``; the HTTP server runs on a daemon thread
-    (stdlib only — no framework dependency).  Port 0 binds an ephemeral port.
+    ``/metrics`` is Prometheus text format (docs/OBSERVABILITY.md);
+    ``/healthz`` returns 503 while the worker thread is dead.  Returns
+    ``(httpd, bound_port)``; the HTTP server runs on a daemon thread (stdlib
+    only — no framework dependency).  Port 0 binds an ephemeral port.
     """
     handler = type("_Bound", (_StatsHandler,), {"server_ref": server})
     httpd = ThreadingHTTPServer((host, port), handler)

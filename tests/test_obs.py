@@ -1,0 +1,278 @@
+"""Observability subsystem: metrics primitives, exposition, tracing.
+
+Covers the registry/family/child layer (atomicity under threads, Prometheus
+text rendering + the round-trip parser), the tracer's zero-cost-off and
+span-tree semantics, and the registry-backed rewiring of the legacy stats
+objects (EngineStats, ChainStats) that the engines and kernels mutate from
+worker threads.
+"""
+import json
+import threading
+
+import pytest
+
+from repro.obs import (NOOP_SPAN, AtomicCounter, MetricsRegistry, Tracer,
+                       exposition, parse_exposition)
+from repro.obs.naming import chain_label
+
+
+# ------------------------------------------------------------- primitives
+def test_atomic_counter_threaded():
+    c = AtomicCounter()
+    n_threads, per = 8, 2500
+
+    def work():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per
+
+
+def test_atomic_counter_set_max():
+    c = AtomicCounter()
+    c.set_max(5)
+    c.set_max(3)
+    assert c.value == 5
+
+
+def test_counter_family_labels_and_render():
+    reg = MetricsRegistry()
+    fam = reg.counter("x_total", "things", labels=("kind",))
+    fam.labels(kind="a").inc()
+    fam.labels(kind="a").inc(2)
+    fam.labels(kind="b").inc()
+    text = fam.render()
+    assert "# TYPE x_total counter" in text
+    assert 'x_total{kind="a"} 3' in text
+    assert 'x_total{kind="b"} 1' in text
+    # same label value -> same child object (get-or-create)
+    assert fam.labels(kind="a") is fam.labels(kind="a")
+
+
+def test_unlabeled_family_proxies_implicit_child():
+    reg = MetricsRegistry()
+    g = reg.gauge("depth")
+    g.set(4)
+    g.set_max(2)
+    assert g.value == 4
+    labeled = reg.counter("y_total", labels=("t",))
+    with pytest.raises(ValueError, match="use .labels"):
+        labeled.inc()
+
+
+def test_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("lat_seconds", labels=(), buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 0.5, 5.0):
+        h.observe(v)
+    text = h.render()
+    assert 'lat_seconds_bucket{le="0.1"} 1' in text
+    assert 'lat_seconds_bucket{le="1"} 3' in text        # cumulative
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+    snap = h.labels().snapshot()
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(6.05)
+
+
+def test_summary_ring_bounded_and_quantiles():
+    reg = MetricsRegistry()
+    s = reg.summary("ring_seconds", maxlen=10).labels()
+    for i in range(100):
+        s.observe(float(i))
+    assert len(s.samples()) == 10                         # bounded ring
+    assert s.samples() == [float(i) for i in range(90, 100)]
+    assert s.count == 100                                 # lifetime count
+    assert s.quantile(0.5) in (94.0, 95.0)   # nearest-rank over the ring
+    assert s.quantile(0.99) == 99.0
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = MetricsRegistry()
+    a = reg.counter("z_total", labels=("t",))
+    assert reg.counter("z_total", labels=("t",)) is a
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("z_total", labels=("t",))
+    with pytest.raises(ValueError, match="already registered"):
+        reg.counter("z_total", labels=("other",))
+
+
+def test_exposition_merge_dedups_family_names():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("dup_total").inc(1)
+    b.counter("dup_total").inc(99)
+    b.counter("only_b_total").inc(7)
+    text = exposition(a, b)
+    parsed = parse_exposition(text)
+    assert parsed["dup_total"][""] == 1                   # first registry wins
+    assert parsed["only_b_total"][""] == 7
+    assert text.count("# TYPE dup_total") == 1
+
+
+def test_parse_exposition_roundtrip_with_labels():
+    reg = MetricsRegistry()
+    reg.counter("r_total", "help text", labels=("tenant",)).labels(
+        tenant="t 0").inc(3)
+    reg.gauge("g").set(2.5)
+    parsed = parse_exposition(reg.exposition())
+    assert parsed["r_total"]['tenant="t 0"'] == 3
+    assert parsed["g"][""] == 2.5
+    with pytest.raises(ValueError, match="malformed"):
+        parse_exposition("no_value_here")
+
+
+def test_sample_value_convenience():
+    reg = MetricsRegistry()
+    reg.counter("s_total", labels=("k",)).labels(k="x").inc(4)
+    assert reg.sample_value("s_total", k="x") == 4
+    assert reg.sample_value("s_total", k="missing") is None
+    assert reg.sample_value("never_registered") is None
+
+
+# ---------------------------------------------------------------- tracing
+def test_tracer_off_returns_falsy_noop_singleton():
+    tr = Tracer()
+    sp = tr.span("anything")
+    assert sp is NOOP_SPAN and not sp
+    assert sp.set(a=1) is sp                # chainable, allocation-free
+    with sp:
+        pass
+    sp.end()                                # idempotent no-op
+
+
+def test_span_tree_parents_via_context():
+    tr = Tracer()
+    tr.enable()                             # ring only, no file
+    try:
+        with tr.span("root") as root, tr.span("child") as child:
+            with tr.span("grandchild") as gc:
+                pass
+        spans = {s.name: s for s in tr.drain()}
+        assert spans["child"].parent_id == root.span_id
+        assert spans["grandchild"].parent_id == child.span_id
+        assert ({s.trace_id for s in spans.values()} == {root.trace_id})
+        assert gc.t1 >= gc.t0
+    finally:
+        tr.disable()
+
+
+def test_span_explicit_parent_t0_and_error_attrs():
+    tr = Tracer()
+    tr.enable()
+    try:
+        root = tr.span("root")
+        late = tr.span("backdated", parent=root, t0=root.t0 - 1.0)
+        late.end()
+        assert late.parent_id == root.span_id
+        assert late.trace_id == root.trace_id
+        assert late.to_dict()["dur_us"] >= 1e6
+        with pytest.raises(RuntimeError, match="boom"), tr.span("failing"):
+            raise RuntimeError("boom")
+        root.end()
+        by_name = {s.name: s for s in tr.drain()}
+        assert by_name["failing"].attrs["error"] == "RuntimeError"
+        assert "boom" in by_name["failing"].attrs["error_msg"]
+    finally:
+        tr.disable()
+
+
+def test_tracer_activate_crosses_thread_boundary():
+    tr = Tracer()
+    tr.enable()
+    try:
+        root = tr.span("root")
+        child_ids = {}
+
+        def worker():
+            with tr.activate(root), tr.span("in_thread") as sp:
+                child_ids["parent"] = sp.parent_id
+                child_ids["trace"] = sp.trace_id
+
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        root.end()
+        assert child_ids["parent"] == root.span_id
+        assert child_ids["trace"] == root.trace_id
+    finally:
+        tr.disable()
+
+
+def test_tracer_jsonl_sink_and_file_cap(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    tr = Tracer()
+    tr.enable(path, max_file_spans=3)
+    try:
+        for i in range(5):
+            tr.span("s").set(i=i).end()
+        tr.flush()
+        lines = [json.loads(ln) for ln in
+                 (tmp_path / "trace.jsonl").read_text().splitlines()]
+        assert len(lines) == 3                            # file cap enforced
+        assert all(set(rec) >= {"trace", "span", "name", "t0", "t1",
+                                "dur_us", "attrs"} for rec in lines)
+        st = tr.stats()
+        assert st["written"] == 3 and st["dropped"] == 2
+        assert len(tr.drain()) == 5                       # ring kept them all
+    finally:
+        tr.disable()
+
+
+# ------------------------------------------------- rewired legacy stores
+def test_engine_stats_threaded_bumps_are_atomic():
+    from repro.engine.engine import EngineStats
+    st = EngineStats()
+    n_threads, per = 8, 1000
+
+    def work():
+        for _ in range(per):
+            st.bump("measure_calls")
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert st.measure_calls == n_threads * per
+    # legacy field surface still writable (tests/seeds do this)
+    st.measure_calls = 2
+    assert st.measure_calls == 2
+    assert st.to_dict()["measure_calls"] == 2
+
+
+def test_engine_stats_mirrors_global_registry():
+    from repro.engine.engine import EngineStats
+    from repro.obs import REGISTRY
+    before = REGISTRY.sample_value("repro_engine_events_total",
+                                   counter="synthesize_calls") or 0
+    EngineStats().bump("synthesize_calls", 3)
+    after = REGISTRY.sample_value("repro_engine_events_total",
+                                  counter="synthesize_calls")
+    assert after == before + 3
+
+
+def test_chain_stats_reset_window_vs_monotone_mirror():
+    from repro.kernels.kron_matvec.stats import (CHAIN_STATS,
+                                                 chain_stats,
+                                                 reset_chain_stats)
+    from repro.obs import REGISTRY
+    reset_chain_stats()
+    before = REGISTRY.sample_value("repro_kernel_events_total",
+                                   event="pads") or 0
+    CHAIN_STATS.inc("pads", 2)
+    assert chain_stats()["pads"] == 2
+    reset_chain_stats()
+    assert chain_stats()["pads"] == 0                     # window resets
+    mirrored = REGISTRY.sample_value("repro_kernel_events_total", event="pads")
+    assert mirrored == before + 2                         # mirror is monotone
+
+
+def test_chain_label_format():
+    assert chain_label((5, 5, 5), 16, "float32") == "5x5x5/b16/f32"
+    assert chain_label((), 4) == "scalar/b4/f32"
+    assert chain_label((7,), 2, "bfloat16") == "7/b2/bf16"

@@ -7,6 +7,7 @@ launches as one tenant alone.
 """
 import json
 import os
+import urllib.error
 import urllib.request
 
 import numpy as np
@@ -368,6 +369,148 @@ def test_stats_dict_and_http_endpoint(tmp_path):
         assert remote["requests_total"] == 2
         ledger = json.load(urllib.request.urlopen(f"{base}/ledger"))
         assert ledger["t1"]["charges"] == 1
+    finally:
+        if httpd is not None:
+            httpd.shutdown()
+        srv.stop()
+        srv.ledger.close()
+
+
+def test_healthz_reports_dead_worker_with_503(tmp_path):
+    """/healthz is a liveness probe: 200 + ok while the worker thread runs,
+    503 + ok=False once it is gone — the same condition submit() refuses on."""
+    plans, margs = _tenant_setup(1)
+    srv = _server(tmp_path, plans)
+    httpd = None
+    try:
+        srv.request_sync(ReleaseRequest(tenant="t0", marginals=margs[0]))
+        httpd, port = start_stats_http(srv)
+        base = f"http://127.0.0.1:{port}"
+        health = json.load(urllib.request.urlopen(f"{base}/healthz"))
+        assert health["ok"] and health["worker_alive"]
+        assert health["queue_depth"] == 0
+        assert health["uptime_s"] >= 0
+        srv.stop()                          # worker dead, HTTP still up
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{base}/healthz")
+        assert ei.value.code == 503
+        body = json.load(ei.value)
+        assert body["ok"] is False and body["worker_alive"] is False
+    finally:
+        if httpd is not None:
+            httpd.shutdown()
+        srv.stop()
+        srv.ledger.close()
+
+
+def test_trace_id_propagates_serve_to_kernel(tmp_path):
+    """One traced request yields ONE connected span tree: the trace ID minted
+    at submit() reaches the kernel.chain spans inside the fused launch, and
+    every span's parent is another span of the same trace."""
+    from repro.obs import TRACER
+    plans, margs = _tenant_setup(2)
+    TRACER.enable()                         # in-memory ring, no file sink
+    TRACER.drain()
+    try:
+        srv = _server(tmp_path, plans, max_batch=8, use_kernel=True)
+        try:
+            srv.pause()
+            futs = [srv.submit(ReleaseRequest(tenant=f"t{i}",
+                                              marginals=margs[i], seed=i))
+                    for i in range(2)]
+            srv.resume()
+            res = [f.result(300) for f in futs]
+            assert all(r.batched for r in res)
+        finally:
+            srv.stop()
+            srv.ledger.close()
+        spans = TRACER.drain()
+    finally:
+        TRACER.disable()
+
+    by_trace = {}
+    for s in spans:
+        by_trace.setdefault(s.trace_id, []).append(s)
+    roots = [s for s in spans if s.name == "serve.request"]
+    assert len(roots) == 2                  # one root per request
+    assert len({r.trace_id for r in roots}) == 2
+    for root in roots:
+        tree = by_trace[root.trace_id]
+        ids = {s.span_id for s in tree}
+        orphans = [s for s in tree
+                   if s.parent_id is not None and s.parent_id not in ids]
+        assert not orphans                  # fully connected tree
+        names = {s.name for s in tree}
+        assert {"serve.request", "serve.queue_wait", "serve.charge",
+                "serve.fuse"} <= names
+        assert root.attrs["outcome"] == "completed"
+    # the fused launch's kernel spans ride the batch leader's trace
+    kernel_spans = [s for s in spans if s.name == "kernel.chain"]
+    assert kernel_spans
+    assert all(s.trace_id in by_trace for s in kernel_spans)
+    leader = [s for s in spans if s.name == "serve.fuse"
+              and not s.attrs.get("shared")]
+    assert leader and any(s.trace_id == leader[0].trace_id
+                          and s.attrs.get("fused") is not None
+                          for s in kernel_spans)
+
+
+def test_metrics_endpoint_parseable_under_concurrent_traffic(tmp_path):
+    """16 threads of mixed traffic + /metrics scrapes: every scrape parses,
+    and the final exposition agrees with /stats (one backing store)."""
+    from repro.obs import parse_exposition
+    plans, margs = _tenant_setup(4)
+    srv = _server(tmp_path, plans, max_batch=8)
+    httpd = None
+    errors = []
+    try:
+        httpd, port = start_stats_http(srv)
+        base = f"http://127.0.0.1:{port}"
+
+        def submit(i):
+            try:
+                for s in range(3):
+                    srv.request_sync(ReleaseRequest(
+                        tenant=f"t{i % 4}", marginals=margs[i % 4],
+                        seed=100 * i + s))
+            except Exception as exc:       # noqa: BLE001 — surfaced below
+                errors.append(exc)
+
+        def scrape():
+            try:
+                for _ in range(10):
+                    with urllib.request.urlopen(f"{base}/metrics") as resp:
+                        assert resp.headers["Content-Type"].startswith(
+                            "text/plain; version=0.0.4")
+                        parse_exposition(resp.read().decode())
+            except Exception as exc:       # noqa: BLE001 — surfaced below
+                errors.append(exc)
+
+        import threading
+        threads = ([threading.Thread(target=submit, args=(i,))
+                    for i in range(8)]
+                   + [threading.Thread(target=scrape) for _ in range(8)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(300)
+        assert not any(t.is_alive() for t in threads)
+        assert not errors, errors[:3]
+
+        # /metrics and /stats read the same store -> identical numbers
+        with urllib.request.urlopen(f"{base}/metrics") as resp:
+            parsed = parse_exposition(resp.read().decode())
+        st = srv.stats_dict()
+        req = parsed["repro_serve_requests_total"]
+        for tname, tstats in st["tenants"].items():
+            assert req.get(f'tenant="{tname}",outcome="completed"',
+                           0) == tstats["completed"]
+        assert parsed["repro_serve_batches_total"][""] == st["batches"]
+        for tname, led in st["ledger"].items():
+            assert parsed["repro_ledger_charges_total"][
+                f'tenant="{tname}"'] == led["charges"]
+            assert parsed["repro_ledger_pcost_spent"][
+                f'tenant="{tname}"'] == pytest.approx(led["pcost_spent"])
     finally:
         if httpd is not None:
             httpd.shutdown()
